@@ -1,0 +1,39 @@
+"""Paper Figs 7/10/13/16: fixed t_PDT sweep — execution-time overhead,
+energy saved, packet-latency overhead, per app x sleep state x t_PDT.
+
+The 9-point t_PDT grid runs on the COUPLED simulator (exact §4 protocol):
+overheads feed back into timing, as in the paper.  Qualitative targets
+(§4.1.1): Deep Sleep with t_PDT <= 10 µs more than doubles LAMMPS runtime
+while Fast Wake stays < 10 %; savings ~10 % at t_PDT >= 100 µs; fixed
+t_PDT >= 1 ms barely saves anything.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (PM, Row, SLEEP_STATES, TPDT_GRID, get_apps,
+                               get_topo, timed)
+from repro.core.eee import Policy
+from repro.core.simulator import compare_policies
+
+
+def run(scale: str = "small"):
+    topo = get_topo(scale)
+    grid = TPDT_GRID if scale == "paper" else TPDT_GRID[::2] + [1.0]
+    rows = []
+    for name, trace in get_apps(scale, topo).items():
+        pols = {f"{st}/t={t:g}": Policy(kind="fixed", t_pdt=t,
+                                        sleep_state=st)
+                for st in SLEEP_STATES for t in grid}
+        out, us = timed(compare_policies, trace, topo, pols, PM)
+        for key, r in out.items():
+            if key == "baseline":
+                continue
+            rows.append(Row(
+                f"fixed_pdt/{name}/{key}", us / max(len(pols), 1),
+                f"exec_oh={r['exec_overhead_pct']:.2f}% "
+                f"lat_oh={r['latency_overhead_pct']:.2f}% "
+                f"saved={r['energy_saved_pct']:.2f}% "
+                f"link_saved={r['link_energy_saved_pct']:.2f}% "
+                f"wakes={r['n_wake_transitions']}"))
+    return rows

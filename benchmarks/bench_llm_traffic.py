@@ -1,0 +1,41 @@
+"""Beyond-paper: EEE power management under REAL LLM training/serving
+traffic — the collective schedule extracted from this framework's own
+compiled (dry-run) cells, replayed on the paper's 4160-node Megafly.
+
+This realizes the paper's motivation ('AI workloads ... can also benefit
+from this topology') with measured, not synthetic, traffic.  Uses cells
+already produced by ``python -m repro.launch.dryrun``; skips cleanly if a
+cell JSON is missing.
+"""
+from __future__ import annotations
+
+from benchmarks.common import PM, Row, timed
+from repro.launch import power_advisor as PA
+
+CELLS = [("qwen2-1.5b", "train_4k"), ("qwen3-moe-30b-a3b", "train_4k"),
+         ("qwen2-1.5b", "decode_32k")]
+
+
+def run(scale: str = "small"):
+    rows = []
+    n_steps = 3 if scale == "paper" else 2
+    for arch, shape in CELLS:
+        try:
+            out, us = timed(PA.advise, arch, shape, n_steps=n_steps)
+        except (FileNotFoundError, ValueError) as e:
+            rows.append(Row(f"llm/{arch}/{shape}", 0.0, f"skipped: {e}"))
+            continue
+        tp, dp = out["tp_dp_bytes"]
+        for name, r in out["table"].items():
+            if name == "baseline":
+                continue
+            rows.append(Row(
+                f"llm/{arch}/{shape}/{name}", us / len(out["table"]),
+                f"exec_oh={r['exec_overhead_pct']:.3f}% "
+                f"saved={r['energy_saved_pct']:.2f}% "
+                f"link_saved={r['link_energy_saved_pct']:.2f}%"))
+        rows.append(Row(
+            f"llm/{arch}/{shape}/summary", us,
+            f"TP={tp/2**20:.1f}MiB/dev/step DP={dp/2**20:.1f}MiB "
+            f"recommended={out['recommended']}"))
+    return rows

@@ -1,0 +1,50 @@
+"""Beyond-paper: Megafly vs fat-tree under identical traffic + policies.
+
+The paper (§2.6) notes BXIv3 supports both; its evaluation uses Megafly.
+Same app trace, same policies, both topologies — compares hop counts,
+wake-transition pressure (more hops = more ports to wake per packet, the
+paper's own argument for Megafly's low diameter), and energy saved.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PM, Row, timed
+from repro.core.eee import Policy
+from repro.core.simulator import compare_policies
+from repro.topology.fattree import FatTree
+from repro.topology.megafly import small_topology
+from repro.traffic.generators import alexnet
+
+
+def run(scale: str = "small"):
+    if scale == "paper":
+        from repro.topology.fattree import paper_equivalent_fattree
+        from repro.topology.megafly import paper_topology
+        topos = {"megafly": paper_topology(),
+                 "fattree": paper_equivalent_fattree()}
+        n_nodes, iters = 64, 10
+    else:
+        topos = {"megafly": small_topology(),
+                 "fattree": FatTree(k=8)}       # 128 nodes vs 80
+        n_nodes, iters = 16, 3
+    pols = {"pbc": Policy(kind="perfbound_correct", bound=0.01,
+                          sleep_state="deep_sleep")}
+    rows = []
+    for name, topo in topos.items():
+        tr = alexnet(topo, n_nodes=n_nodes, iters=iters)
+        out, us = timed(compare_policies, tr, topo, pols, PM)
+        r = out["pbc"]
+        # mean hop count over the trace's flows
+        src = np.concatenate([s.msgs[:, 0] for s in tr.steps
+                              if s.msgs is not None])
+        dst = np.concatenate([s.msgs[:, 1] for s in tr.steps
+                              if s.msgs is not None])
+        hops = topo.routes(src, dst)[2].mean()
+        rows.append(Row(
+            f"topology/{name}", us,
+            f"nodes={topo.n_nodes} links={topo.n_links} "
+            f"mean_hops={hops:.2f} lat_oh={r['latency_overhead_pct']:.2f}% "
+            f"link_saved={r['link_energy_saved_pct']:.2f}% "
+            f"wakes={r['n_wake_transitions']}"))
+    return rows

@@ -1,0 +1,57 @@
+"""Benchmark driver: one module per paper table/figure (+ beyond-paper).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--scale small|paper] [--only X]
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("power_table", "benchmarks.bench_power_table"),       # Tables 5/6
+    ("inactivity", "benchmarks.bench_inactivity"),         # Fig 1
+    ("traffic", "benchmarks.bench_traffic_profiles"),      # Figs 6/9/12/15
+    ("fixed_pdt", "benchmarks.bench_fixed_pdt"),           # Figs 7/10/13/16
+    ("perfbound", "benchmarks.bench_perfbound"),           # Figs 8/11/14/17
+    ("decoupled", "benchmarks.bench_decoupled"),           # DESIGN.md §3
+    ("kernels", "benchmarks.bench_kernels"),               # kernel parity
+    ("llm_traffic", "benchmarks.bench_llm_traffic"),       # beyond paper
+    ("topology", "benchmarks.bench_topology"),             # beyond paper
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["small", "paper"], default="small")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys to run")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    print("name,us_per_call,derived")
+    failures = []
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            for row in mod.run(args.scale):
+                print(row.csv(), flush=True)
+        except Exception as e:  # keep the suite going; report at the end
+            failures.append((key, repr(e)))
+            print(f"{key}/ERROR,0.0,{e!r}", flush=True)
+        print(f"# {key} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# {len(failures)} module(s) failed: {failures}")
+        sys.exit(1)
+    print("# all benchmark modules passed")
+
+
+if __name__ == "__main__":
+    main()

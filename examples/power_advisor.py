@@ -1,0 +1,48 @@
+"""Power advisor: evaluate EEE link power-management for a compiled LLM
+training job BEFORE it runs — the framework's first-class integration of
+the paper's technique (DESIGN.md §2 Layer B).
+
+Reads the multi-pod dry-run artifact for an (arch x shape) cell (compiled
+collective schedule + FLOPs), replays it as traffic on the paper's
+4160-node Megafly, and recommends the best policy under an overhead bound.
+
+Run:  PYTHONPATH=src python examples/power_advisor.py \\
+          [--arch qwen2-1.5b] [--shape train_4k] [--max-overhead-pct 1.0]
+(requires experiments/dryrun JSONs — `python -m repro.launch.dryrun --all`)
+"""
+import argparse
+
+from repro.launch.power_advisor import advise
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--steps", type=int, default=2)
+    ap.add_argument("--max-overhead-pct", type=float, default=1.0)
+    args = ap.parse_args()
+
+    out = advise(args.arch, args.shape, args.mesh, n_steps=args.steps,
+                 max_overhead_pct=args.max_overhead_pct)
+    c = out["cell"]
+    tp, dp = out["tp_dp_bytes"]
+    print(f"job: {c['arch']} / {c['shape']} on {c['mesh']} "
+          f"({c['n_devices']} chips mapped onto the 4160-node Megafly)")
+    print(f"measured collective schedule: TP/EP {tp/2**20:.1f} MiB per "
+          f"device-step, DP {dp/2**20:.1f} MiB")
+    hdr = (f"{'policy':18s} {'exec_oh%':>9s} {'lat_oh%':>9s} "
+           f"{'saved%':>8s} {'link_saved%':>12s}")
+    print("\n" + hdr + "\n" + "-" * len(hdr))
+    for name, r in out["table"].items():
+        print(f"{name:18s} {r['exec_overhead_pct']:9.3f} "
+              f"{r['latency_overhead_pct']:9.2f} "
+              f"{r['energy_saved_pct']:8.2f} "
+              f"{r['link_energy_saved_pct']:12.2f}")
+    print(f"\nrecommended (overhead <= {args.max_overhead_pct}%): "
+          f"{out['recommended']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: simulate EEE power management on an HPC application trace.
+
+Builds the paper's 4160-node Megafly, generates a LAMMPS-like trace, and
+compares the paper's policies — fixed-PDT, PerfBound, and the paper's
+contribution PerfBoundCorrect — printing the §4 metrics (execution-time
+overhead, packet-latency overhead, energy saved).
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--small]
+"""
+import argparse
+
+from repro.core.eee import Policy, PowerModel
+from repro.core.simulator import compare_policies
+from repro.topology.megafly import paper_topology, small_topology
+from repro.traffic.generators import lammps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true",
+                    help="80-node topology + short trace (seconds, not minutes)")
+    args = ap.parse_args()
+
+    topo = small_topology() if args.small else paper_topology()
+    trace = lammps(topo, n_nodes=16 if args.small else 64,
+                   iters=8 if args.small else 40)
+    print(f"topology: {topo.n_nodes} nodes, {topo.n_switches} switches, "
+          f"{topo.n_ports} port-ends")
+    print(f"trace: {trace.name}, {trace.n_messages} messages, "
+          f"{trace.total_bytes / 2**30:.2f} GiB")
+
+    policies = {
+        "fixed_fw_100us": Policy(kind="fixed", t_pdt=100e-6,
+                                 sleep_state="fast_wake"),
+        "fixed_ds_100us": Policy(kind="fixed", t_pdt=100e-6,
+                                 sleep_state="deep_sleep"),
+        "perfbound_1pct": Policy(kind="perfbound", bound=0.01,
+                                 sleep_state="deep_sleep"),
+        "pbc_1pct": Policy(kind="perfbound_correct", bound=0.01,
+                           sleep_state="deep_sleep"),
+    }
+    table = compare_policies(trace, topo, policies, PowerModel())
+
+    hdr = (f"{'policy':18s} {'exec_oh%':>9s} {'lat_oh%':>9s} "
+           f"{'saved%':>8s} {'link_saved%':>12s} {'asleep':>7s}")
+    print("\n" + hdr + "\n" + "-" * len(hdr))
+    for name, r in table.items():
+        print(f"{name:18s} {r['exec_overhead_pct']:9.3f} "
+              f"{r['latency_overhead_pct']:9.2f} "
+              f"{r['energy_saved_pct']:8.2f} "
+              f"{r['link_energy_saved_pct']:12.2f} "
+              f"{r['asleep_frac']:7.2f}")
+    pbc, pb = table["pbc_1pct"], table["perfbound_1pct"]
+    print(f"\nPerfBoundCorrect vs PerfBound: latency overhead "
+          f"{pb['latency_overhead_pct']:.2f}% -> "
+          f"{pbc['latency_overhead_pct']:.2f}%, energy saved "
+          f"{pb['energy_saved_pct']:.2f}% -> {pbc['energy_saved_pct']:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

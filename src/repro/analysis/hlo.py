@@ -1,0 +1,386 @@
+"""Post-SPMD HLO text analysis: collective-op byte census.
+
+``cost_analysis`` does not report collective traffic, so we parse the
+compiled module: every all-reduce / all-gather / reduce-scatter / all-to-all
+/ collective-permute op is summed (operand bytes, per device), multiplying
+ops inside ``while`` bodies (scanned layers, KV loops) by the loop trip
+count (XLA's ``known_trip_count`` backend_config, with a constant-in-
+condition fallback).
+
+Format notes (XLA CPU/TPU post-optimization HLO):
+  * computation headers sit at column 0: ``%name (args...) -> type {`` —
+    args may contain nested parentheses (tuple params), so the header regex
+    only consumes up to the first ``(``;
+  * async pairs ``<op>-start`` / ``<op>-done``: the start op's result is a
+    tuple holding (operand alias, result, ...); we take the largest element
+    as the transfer payload and skip the ``-done`` line;
+  * replica_groups come as explicit lists ``{{0,1},{2,3}}`` or iota form
+    ``[G,S]<=[N]...`` (G groups of S participants).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](T\([\d,]+\))?")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n"\s*:\s*"(\d+)"')
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+
+def _shapes_in(type_str: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dt])
+    return out
+
+
+def _result_bytes(type_str: str, started: bool) -> int:
+    """Payload bytes of a collective's result type.
+
+    Plain ops: sum every array in the (possibly tuple) type.  ``-start``
+    ops return (operand alias, result, [scratch]) — take the largest array
+    to avoid double-counting the aliased operand.
+    """
+    shapes = _shapes_in(type_str)
+    if not shapes:
+        return 0
+    if started:
+        return max(shapes)
+    return sum(shapes) if len(shapes) == 1 else max(shapes)
+
+
+def _split_computations(text: str) -> dict:
+    comps, name, buf = {}, None, []
+    for line in text.splitlines():
+        if name is None:
+            if not line.startswith((" ", "\t")) and line.rstrip().endswith("{"):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m:
+                    name = m.group(1)
+                    buf = []
+            continue
+        if line.startswith("}"):
+            comps[name] = buf
+            name = None
+            continue
+        buf.append(line.strip())
+    return comps
+
+
+def _call_graph(comps):
+    """(trip, caller): while-loop trip counts and callee->caller edges
+    (fusion calls, reductions, while bodies/conds, conditional branches)."""
+    trip, caller = {}, {}
+    for name, lines in comps.items():
+        for ln in lines:
+            m = _WHILE_RE.search(ln)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                tm = _TRIP_RE.search(ln)
+                if tm:
+                    t = int(tm.group(1))
+                else:  # fallback: largest s32 constant in the condition
+                    consts = []
+                    for cl in comps.get(cond, []):
+                        consts += [int(x) for x in _CONST_RE.findall(cl)]
+                    t = max(consts) if consts else 1
+                trip[body] = t
+                caller[body] = name
+                caller[cond] = name
+            for cal in _CALLS_RE.findall(ln):
+                caller.setdefault(cal, name)
+            # conditional branches run (at most once) per parent visit
+            for bm in _BRANCHES_RE.finditer(ln):
+                names = bm.group(1) or ""
+                for part in (re.findall(r"%?([\w\.\-]+)", names)
+                             + [bm.group(2), bm.group(3)]):
+                    if part:
+                        caller.setdefault(part, name)
+    return trip, caller
+
+
+def _mult(comp, trip, caller, seen=()):
+    if comp in seen:
+        return 1
+    m = trip.get(comp, 1)
+    c = caller.get(comp)
+    return m * (_mult(c, trip, caller, seen + (comp,)) if c else 1)
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Returns {'per_op': {op: bytes}, 'total_bytes': float,
+    'wire_bytes': float, 'n_ops': int, 'while_trip_counts': {...}}.
+
+    ``total_bytes`` sums logical operand bytes (x trip count), per device.
+    ``wire_bytes`` applies ring-algorithm factors per op kind and group
+    size n: all-reduce 2(n-1)/n, all-gather/reduce-scatter/all-to-all
+    (n-1)/n, collective-permute 1.
+    """
+    comps = _split_computations(hlo_text)
+    trip, caller = _call_graph(comps)
+
+    def multiplier(comp):
+        return _mult(comp, trip, caller)
+
+    per_op = defaultdict(float)
+    per_op_count = defaultdict(int)
+    per_axis = defaultdict(float)
+    wire_axis = defaultdict(float)
+    wire = 0.0
+    n_ops = 0
+    for name, lines in comps.items():
+        mult = multiplier(name)
+        for ln in lines:
+            m = _COLL_RE.search(ln)
+            if not m:
+                continue
+            type_str, op, started = m.group(1), m.group(2), bool(m.group(3))
+            res_bytes = _result_bytes(type_str, started)
+            # group size + axis classification: groups of CONTIGUOUS device
+            # ids run along the innermost mesh axis ('model' -> TP/EP/SP);
+            # strided or permuted groups cross it ('data'/'pod' -> DP).
+            g = _GROUPS_RE.search(ln)
+            axis = "dp"
+            if g:
+                members = [int(x) for x in g.group(1).split(",")]
+                n = len(members)
+                if members == list(range(members[0], members[0] + n)):
+                    axis = "tp"
+            else:
+                g2 = _GROUPS_IOTA_RE.search(ln)
+                if g2:
+                    n = int(g2.group(2))
+                    axis = "dp" if g2.group(4) else "tp"  # T(..) = strided
+                else:
+                    n = 1
+            n = max(n, 1)
+            if n == 1:
+                axis = "local"
+            if op == "all-gather":
+                operand = res_bytes / n
+                w = res_bytes * (n - 1) / n
+            elif op == "reduce-scatter":
+                operand = res_bytes * n
+                w = operand * (n - 1) / n
+            elif op == "all-reduce":
+                operand = res_bytes
+                w = 2 * res_bytes * (n - 1) / n
+            elif op == "all-to-all":
+                operand = res_bytes
+                w = res_bytes * (n - 1) / n
+            else:  # collective-permute
+                operand = res_bytes
+                w = res_bytes
+            per_op[op] += operand * mult
+            per_op_count[op] += mult
+            per_axis[axis] += operand * mult
+            wire += w * mult
+            wire_axis[axis] += w * mult
+            n_ops += 1
+    return {
+        "per_op": {k: float(v) for k, v in per_op.items()},
+        "per_op_count": dict(per_op_count),
+        "per_axis": {k: float(v) for k, v in per_axis.items()},
+        "wire_axis": {k: float(v) for k, v in wire_axis.items()},
+        "total_bytes": float(sum(per_op.values())),
+        "wire_bytes": float(wire),
+        "n_ops": n_ops,
+        "while_trip_counts": dict(trip),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Module cost (FLOPs / HBM bytes) with loop-trip multipliers
+# ---------------------------------------------------------------------------
+#
+# ``compiled.cost_analysis()`` counts every computation ONCE — a scanned
+# 60-layer transformer reports ~1 layer of FLOPs.  We re-derive both terms
+# from the scheduled module text, multiplying by while-loop trip counts:
+#
+#   * FLOPs: every ``dot`` op contributes 2 x numel(result) x K (K = the
+#     product of its lhs contracting-dim sizes, looked up from the operand's
+#     defining instruction).  Dots inside fusions are found by walking
+#     fusion computations with their caller's multiplier.
+#   * HBM bytes: post-fusion HLO is exactly HBM-materialization
+#     granularity — each scheduled instruction reads its operands and
+#     writes its result once.  We sum operand+result bytes over scheduled
+#     (non-fusion-internal) instructions, skipping aliasing/no-op kinds.
+
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+                       r"(\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(
+    r"(?:branch_computations=\{([^}]*)\}"
+    r"|true_computation=%?([\w\.\-]+)|false_computation=%?([\w\.\-]+))")
+_DIMS_RE = re.compile(r"\w+\[([\d,]*)\]")
+
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "get-dimension-size", "opt-barrier",
+               # control-flow wrappers alias their carry, they don't move it
+               "while", "conditional", "call"}
+
+
+def _first_dims(type_str: str):
+    m = _DIMS_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(1).split(",")] if m.group(1) else []
+
+
+def module_cost(hlo_text: str) -> dict:
+    """Returns {'flops': float, 'bytes': float, 'dot_flops_by_comp': {...}}
+    per device, with while-trip multipliers applied."""
+    comps = _split_computations(hlo_text)
+    trip, caller = _call_graph(comps)
+
+    fusion_comps = set()
+    for name, lines in comps.items():
+        for ln in lines:
+            if " fusion(" in ln:
+                for cal in _CALLS_RE.findall(ln):
+                    fusion_comps.add(cal)
+
+    # Effective operand sizes for fusion parameters consumed ONLY through
+    # dynamic-slice: the fusion reads the slice, not the stacked buffer
+    # (critical for scanned-layer models, where every weight is a slice of
+    # an (L, ...) array and the loop multiplier would 28x-overcount reads).
+    fusion_param_bytes = {}      # comp -> {param_index: effective_bytes}
+    fusion_out_bytes = {}        # comp -> effective result bytes (aliased
+    #                              DUS-rooted fusions update in place)
+    for fname in fusion_comps:
+        lines = comps.get(fname, [])
+        param_idx, slice_bytes, other_use = {}, {}, set()
+        types_f = {}
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            iname, type_str, kind = im.groups()
+            types_f[iname] = type_str
+            if kind == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", ln)
+                if pm:
+                    param_idx[iname] = int(pm.group(1))
+                continue
+            args = ln[im.end():]
+            arg_str = args.split("), ")[0]
+            names = _OPERANDS_RE.findall(arg_str)
+            if ln.startswith("ROOT") and kind == "dynamic-update-slice":
+                upd_t = types_f.get(names[1]) if len(names) > 1 else None
+                if upd_t:  # in-place window update, not a full rewrite
+                    fusion_out_bytes[fname] = 2 * sum(_shapes_in(upd_t))
+            for j, op_name in enumerate(names):
+                if op_name not in param_idx:
+                    continue
+                if kind == "dynamic-slice" and j == 0:
+                    slice_bytes[op_name] = slice_bytes.get(op_name, 0) \
+                        + sum(_shapes_in(type_str))
+                elif kind == "dynamic-update-slice" and j == 0 \
+                        and ln.startswith("ROOT"):
+                    # the updated buffer param aliases the output: its
+                    # read traffic is covered by fusion_out_bytes
+                    slice_bytes.setdefault(op_name, 0)
+                else:
+                    other_use.add(op_name)
+        eff = {param_idx[p]: b for p, b in slice_bytes.items()
+               if p not in other_use}
+        if eff:
+            fusion_param_bytes[fname] = eff
+
+    def mult(comp):
+        return _mult(comp, trip, caller)
+
+    flops = 0.0
+    byts = 0.0
+    by_comp = {}
+    for name, lines in comps.items():
+        mm = mult(name)
+        types = {}
+        comp_flops = 0.0
+        schedulable = name not in fusion_comps
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            iname, type_str, kind = im.groups()
+            types[iname] = type_str
+            # ---- FLOPs: dot ops anywhere --------------------------------
+            if kind == "dot":
+                dims = _first_dims(type_str)
+                out_n = 1
+                for d in (dims or []):
+                    out_n *= d
+                k = 1
+                cm = _LHS_CDIMS_RE.search(ln)
+                args = ln[ln.index("dot(") + 4:]
+                ops_names = _OPERANDS_RE.findall(
+                    args[:args.index(")")] if ")" in args else args)
+                if cm and ops_names:
+                    lhs_t = types.get(ops_names[0])
+                    if lhs_t is not None:
+                        ldims = _first_dims(lhs_t) or []
+                        for ci in cm.group(1).split(","):
+                            if ci and int(ci) < len(ldims):
+                                k *= ldims[int(ci)]
+                comp_flops += 2.0 * out_n * k
+            # ---- HBM bytes: scheduled instructions only ------------------
+            if schedulable and kind not in _NO_TRAFFIC:
+                paren = ln[im.end():]
+                arg_str = paren.split("), ")[0]
+                ops_names = _OPERANDS_RE.findall(arg_str)
+                if kind == "dynamic-slice":
+                    # reads only the slice it produces, not the buffer
+                    total = 2 * sum(_shapes_in(type_str))
+                elif kind == "dynamic-update-slice":
+                    # reads + writes only the update window (in-place)
+                    upd_t = types.get(ops_names[1]) if len(ops_names) > 1 \
+                        else None
+                    total = (2 * sum(_shapes_in(upd_t)) if upd_t
+                             else sum(_shapes_in(type_str)))
+                else:
+                    eff = {}
+                    out_b = None
+                    if kind == "fusion":
+                        cm = _CALLS_RE.search(ln)
+                        if cm:
+                            eff = fusion_param_bytes.get(cm.group(1), {})
+                            out_b = fusion_out_bytes.get(cm.group(1))
+                    total = (out_b if out_b is not None
+                             else sum(_shapes_in(type_str)))
+                    for j, op_name in enumerate(ops_names):
+                        if j in eff:
+                            total += eff[j]
+                            continue
+                        t = types.get(op_name)
+                        if t is not None:
+                            total += sum(_shapes_in(t))
+                byts += total * mm
+        flops += comp_flops * mm
+        if comp_flops:
+            by_comp[name] = comp_flops * mm
+    return {"flops": float(flops), "bytes": float(byts),
+            "dot_flops_by_comp": by_comp}

@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager, restore_checkpoint, save_checkpoint,
+)

@@ -1,0 +1,103 @@
+"""Decoupled (per-port) policy evaluation — the fast sweep path.
+
+Given per-link busy intervals recorded from one coupled baseline run
+(policy='none'), evaluate any number of PDT policies WITHOUT re-simulating
+the network: each link's EEE state machine depends only on its own arrival
+process once latency feedback is ignored (first-order approximation,
+quantified against the coupled simulator in benchmarks/bench_decoupled.py).
+
+Pipeline (all Pallas-kernel backed):
+  events -> per-port (gap, duration) streams   [host sort]
+         -> hist_update kernel  -> inactivity histograms
+         -> tpdt_select kernel  -> per-port PerfBound t_PDT snapshot
+         -> port_energy kernel  -> energy / hits / misses per port
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import perfbound as pb
+from repro.core.eee import Policy, PowerModel
+from repro.kernels import ops
+
+
+def events_to_streams(events, n_links, t_end):
+    """events: list of (link, t_start, t_end) host arrays from
+    ``simulate_trace(..., collect_events=True)``.
+
+    Returns gaps (E,P) f32, durs (E,P) f32, tail (P,) f32 — per-link idle
+    gap before each busy interval (merged across both directions) and the
+    closing idle tail up to ``t_end``.
+    """
+    lp = np.concatenate([e[0] for e in events])
+    ts = np.concatenate([e[1] for e in events])
+    te = np.concatenate([e[2] for e in events])
+    order = np.lexsort((ts, lp))
+    lp, ts, te = lp[order], ts[order], te[order]
+
+    counts = np.bincount(lp, minlength=n_links)
+    E = max(int(counts.max(initial=1)), 1)
+    P = n_links
+    gaps = np.zeros((E, P), np.float32)
+    durs = np.zeros((E, P), np.float32)
+    tail = np.full((P,), t_end, np.float32)
+
+    pos = np.zeros(P, np.int64)
+    last = np.zeros(P, np.float64)
+    # merge overlapping intervals per link (full-duplex overlap)
+    for l, s, e in zip(lp, ts, te):
+        if s < last[l]:  # overlaps previous busy window: extend it
+            if e > last[l]:
+                durs[pos[l] - 1, l] += e - last[l]
+                last[l] = e
+            continue
+        gaps[pos[l], l] = s - last[l]
+        durs[pos[l], l] = e - s
+        pos[l] += 1
+        last[l] = e
+    tail = (t_end - last).astype(np.float32)
+    return jnp.asarray(gaps), jnp.asarray(durs), jnp.asarray(tail)
+
+
+def evaluate_fixed(gaps, durs, tail, t_pdt, policy: Policy,
+                   pm: PowerModel, use_ref=False):
+    """Evaluate a per-port (or scalar) t_PDT assignment.  Returns dict."""
+    P = gaps.shape[1]
+    tpdt = jnp.broadcast_to(jnp.asarray(t_pdt, jnp.float32), (P,))
+    st = policy.state
+    out = ops.port_energy_op(gaps, durs, tpdt, tail, t_w=st.t_w, t_s=st.t_s,
+                             use_ref=use_ref)
+    frac = st.power_frac
+    link_energy = 2 * pm.port_power * (out["time_wake"].sum()
+                                       + frac * out["time_sleep"].sum())
+    return dict(out, link_energy=float(link_energy),
+                wake_time=float(out["time_wake"].sum()),
+                sleep_time=float(out["time_sleep"].sum()))
+
+
+def perfbound_snapshot_tpdt(gaps, t_elapsed, hop_mean, policy: Policy,
+                            use_ref=False):
+    """One-shot PerfBound prediction from the full gap history (the
+    'periodic batched recalculation' mode of §3.2, kernel-accelerated)."""
+    counts, sums = ops.hist_update_op(
+        gaps, n_bins=policy.hist_bins, bin_width=policy.hist_bin_width,
+        log_bins=policy.hist_log_bins, log_min=policy.hist_log_min,
+        log_max=policy.hist_log_max, use_ref=use_ref)
+    l = policy.bound / max(hop_mean, 1.0)
+    N = jnp.full(counts.shape[:1], l * t_elapsed / policy.state.t_w,
+                 jnp.float32)
+    centers = pb.bin_centers(policy).astype(jnp.float32)
+    total = counts.sum(-1)
+    return ops.tpdt_select_op(counts, sums, N, total, centers,
+                              max_tpdt=policy.max_tpdt,
+                              tpdt_init=policy.tpdt_init, use_ref=use_ref)
+
+
+def sweep_policies(events, n_links, t_end, tpdt_values, policy: Policy,
+                   pm: PowerModel | None = None):
+    """Fast sweep of fixed t_PDT values over one recorded baseline run."""
+    pm = pm or PowerModel()
+    gaps, durs, tail = events_to_streams(events, n_links, t_end)
+    return {t: evaluate_fixed(gaps, durs, tail, t, policy, pm)
+            for t in tpdt_values}

@@ -1,0 +1,121 @@
+"""EEE link power states, power-management policies, and the system power
+model (paper §2.4, §3.1, Tables 3/5/6)."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class LinkState:
+    """One EEE low-power state (transition targets; Wake is implicit)."""
+    name: str
+    t_w: float            # transition sleep -> wake (s)
+    t_s: float            # transition wake -> sleep (s)
+    power_frac: float     # link power in this state / wake power
+
+    def __post_init__(self):
+        assert self.t_w > 0 and self.t_s > 0 and 0 < self.power_frac < 1
+
+
+# Table 6 values (derived from EEE / 802.3bj, Table 3)
+FAST_WAKE = LinkState("fast_wake", t_w=375e-9, t_s=200e-9, power_frac=0.4)
+DEEP_SLEEP = LinkState("deep_sleep", t_w=4.48e-6, t_s=2e-6, power_frac=0.1)
+EEE_STATES = {"fast_wake": FAST_WAKE, "deep_sleep": DEEP_SLEEP}
+
+
+@dataclass(frozen=True)
+class Policy:
+    """Power-down policy for every port in the network.
+
+    kind:
+      * ``none``       — links always awake (baseline; t_PDT = inf).
+      * ``fixed``      — constant ``t_pdt`` on every port (§2.5, PDT).
+      * ``perfbound``  — per-port adaptive t_PDT from the inactivity
+                         histogram, degradation bound ``bound`` (§2.5 [28]).
+      * ``perfbound_correct`` — PerfBound + miss-ratio corrective factor
+                         (§3.4, the paper's contribution).
+    hist_mode: ``keep_all`` | ``self_clear`` | ``circular`` (§3.2/§4).
+    """
+    kind: str = "none"
+    sleep_state: str = "deep_sleep"
+    t_pdt: float = 0.0
+    bound: float = 0.01
+    hist_mode: str = "keep_all"
+    hist_bins: int = 200
+    hist_bin_width: float = 10e-6     # seconds/bin (linear binning)
+    hist_log_bins: bool = False       # beyond-paper: log-spaced bins
+    hist_log_min: float = 1e-7        # first log-bin edge (s)
+    hist_log_max: float = 10.0        # last log-bin edge (s)
+    hist_clear_n: int = 250           # self_clear: reset period (samples)
+    ring_n: int = 250                 # circular: ring capacity
+    # beyond-paper (the paper's §5 future-work question): exponential
+    # recency bias — every insert first scales the port's histogram by
+    # ``hist_decay`` (1.0 = off, paper-faithful).  keep_all mode only.
+    hist_decay: float = 1.0
+    n_r: int = 32                     # PBC shift-register length (<= 32)
+    max_tpdt: float = 10e-3           # PBC cap; also no-feasible-bin fallback
+    tpdt_init: float = 10e-3          # prediction before history forms
+    sync_overhead: float = 5e-9       # §3.1 port-pair sync message cost
+    cf_mode: str = "uplift"           # 'uplift': t*(1+cf) | 'scale': t*max(cf,1)
+    record_hist: bool = False         # record gaps even for none/fixed (Fig 1)
+
+    def __post_init__(self):
+        assert self.kind in ("none", "fixed", "perfbound", "perfbound_correct")
+        assert self.sleep_state in EEE_STATES
+        assert self.hist_mode in ("keep_all", "self_clear", "circular")
+        assert 1 <= self.n_r <= 32
+        assert 0.0 < self.hist_decay <= 1.0
+        assert self.hist_decay == 1.0 or self.hist_mode == "keep_all", \
+            "recency decay composes with keep_all histograms only"
+
+    @property
+    def state(self) -> LinkState:
+        return EEE_STATES[self.sleep_state]
+
+    @property
+    def adaptive(self) -> bool:
+        return self.kind in ("perfbound", "perfbound_correct")
+
+
+@dataclass(frozen=True)
+class PowerModel:
+    """Table 5: system power inventory (W) + link bandwidth."""
+    switch_power: float = 250.0
+    node_power_min: float = 800.0
+    node_power_max: float = 1200.0
+    port_power: float = 24.0          # per port-end at Wake
+    link_bandwidth: float = 50e9      # bytes/s (400 Gb/s)
+    switch_latency: float = 300e-9    # per-hop cut-through latency (s)
+
+    def static_table(self, topo):
+        """Reproduces Table 5/6 percentages for a topology.
+
+        Following the paper's convention, each row holds the links AT the
+        state's power level while nodes swing between min (idle) and max
+        (full load) — i.e. the state's best-case network share bound.
+        """
+        sw = self.switch_power * topo.n_switches
+        links_max = self.port_power * topo.n_ports
+        nodes_min = self.node_power_min * topo.n_nodes
+        nodes_max = self.node_power_max * topo.n_nodes
+        out = {}
+        for state_name, frac in [("wake", 1.0)] + [
+                (s.name, s.power_frac) for s in EEE_STATES.values()]:
+            links_s = links_max * frac
+            idle_total = sw + nodes_min + links_s
+            full_total = sw + nodes_max + links_s
+            out[state_name] = {
+                "links_power_idle_W": links_s,
+                "network_power_idle_W": sw + links_s,
+                "network_of_total_idle": (sw + links_s) / idle_total,
+                "network_of_total_full": (sw + links_s) / full_total,
+                "links_of_total_idle": links_s / idle_total,
+                # the paper's constant 8.68 % column: links all awake under
+                # full load, as a share of the full-load system
+                "links_of_total_full": links_max
+                / (sw + nodes_max + links_max),
+                "system_idle_W": idle_total,
+                "system_full_W": full_total,
+            }
+        return out

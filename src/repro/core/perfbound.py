@@ -1,0 +1,272 @@
+"""PerfBound and PerfBoundCorrect predictor state + math (paper §2.5, §3.4).
+
+All state lives in dense per-link arrays so the whole network's predictors
+update in a few scatters per simulated message.  The same functions serve as
+the pure-jnp oracle for the Pallas kernels (``repro.kernels.ref`` re-exports).
+
+Paper mapping
+-------------
+* inactivity histogram: ``counts``/``sums`` (B bins; per-bin value sums so
+  t_PDT = *mean* of the selected bin, as the paper specifies).
+* three management modes (§3.2/§4): keep_all, self_clear (reset every
+  ``hist_clear_n`` samples), circular (ring of the last ``ring_n`` samples
+  with O(1) add/evict).
+* hop-distance correction: per-link histogram of remaining-hops of forwarded
+  packets; ``l = bound * sum_i p_i / h_i`` (Eq. 1).
+* degradation budget: ``N = l * X / t_w`` with X = wall-time covered by the
+  current histogram window.
+* PerfBoundCorrect (§3.4): ``n_r``-slot shift register of hit/miss outcomes +
+  slot-aligned log-ratio store; ``cf = miss% * geomean(ratios)``;
+  ``t_PDT' = min(t_PDT * (1 + cf), max_tpdt)`` (interpretation notes in
+  DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+MAXH = 7  # hop-count histogram rows 0..6 (Megafly max 5, fat-tree 6)
+
+
+# ---------------------------------------------------------------------------
+# Binning
+# ---------------------------------------------------------------------------
+
+
+def bin_index(gap, policy):
+    """gap (seconds) -> bin id in [0, B)."""
+    B = policy.hist_bins
+    if policy.hist_log_bins:
+        lo, hi = math.log(policy.hist_log_min), math.log(policy.hist_log_max)
+        x = (jnp.log(jnp.maximum(gap, policy.hist_log_min)) - lo) / (hi - lo)
+        return jnp.clip((x * B).astype(jnp.int32), 0, B - 1)
+    return jnp.clip((gap / policy.hist_bin_width).astype(jnp.int32), 0, B - 1)
+
+
+def bin_centers(policy):
+    B = policy.hist_bins
+    if policy.hist_log_bins:
+        lo, hi = math.log(policy.hist_log_min), math.log(policy.hist_log_max)
+        edges = np.exp(np.linspace(lo, hi, B + 1))
+        return jnp.asarray(np.sqrt(edges[:-1] * edges[1:]))
+    return (jnp.arange(B) + 0.5) * policy.hist_bin_width
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+
+def init_state(n_links, policy):
+    P, B = n_links, policy.hist_bins
+    st = {
+        "counts": jnp.zeros((P, B), jnp.float64),
+        "sums": jnp.zeros((P, B), jnp.float64),
+        "total": jnp.zeros((P,), jnp.int64),
+        "win_start": jnp.zeros((P,), jnp.float64),
+        "hops": jnp.zeros((P, MAXH), jnp.int64),
+        "tpdt": jnp.full((P,), _initial_tpdt(policy), jnp.float64),
+    }
+    if policy.hist_mode == "circular":
+        R = policy.ring_n
+        st["ring_bin"] = jnp.full((P, R), -1, jnp.int32)
+        st["ring_val"] = jnp.zeros((P, R), jnp.float64)
+        st["ring_time"] = jnp.zeros((P, R), jnp.float64)
+        st["ring_head"] = jnp.zeros((P,), jnp.int32)
+        st["ring_fill"] = jnp.zeros((P,), jnp.int32)
+    if policy.kind == "perfbound_correct":
+        st["reg"] = jnp.zeros((P,), jnp.uint32)
+        st["ratio_log"] = jnp.zeros((P, policy.n_r), jnp.float64)
+        st["reg_head"] = jnp.zeros((P,), jnp.int32)
+        st["n_seen"] = jnp.zeros((P,), jnp.int32)
+    return st
+
+
+def _initial_tpdt(policy):
+    if policy.kind == "none":
+        return jnp.inf
+    if policy.kind == "fixed":
+        return policy.t_pdt
+    return policy.tpdt_init
+
+
+# ---------------------------------------------------------------------------
+# Updates (batched over K link slots; links within a batch must be distinct,
+# which minimal routing guarantees for the hops of one message)
+# ---------------------------------------------------------------------------
+
+
+def record_gaps(st, lp, gap, t_now, active, policy):
+    """Insert inactivity gaps.  lp,gap,t_now,active: (K,)."""
+    do = active & (gap > 0)
+    b = bin_index(gap, policy)
+    g = jnp.where(do, gap, 0.0)
+    inc = do.astype(st["counts"].dtype)
+
+    if policy.hist_mode == "circular":
+        R = policy.ring_n
+        head = st["ring_head"][lp]
+        full = st["ring_fill"][lp] >= R
+        old_b = st["ring_bin"][lp, head]
+        old_v = st["ring_val"][lp, head]
+        evict = do & full & (old_b >= 0)
+        # evict oldest, insert new (O(1))
+        counts = st["counts"].at[lp, old_b].add(-evict.astype(jnp.float64))
+        sums = st["sums"].at[lp, old_b].add(jnp.where(evict, -old_v, 0.0))
+        counts = counts.at[lp, b].add(inc)
+        sums = sums.at[lp, b].add(g)
+        st = dict(
+            st, counts=counts, sums=sums,
+            ring_bin=st["ring_bin"].at[lp, head].set(
+                jnp.where(do, b, st["ring_bin"][lp, head])),
+            ring_val=st["ring_val"].at[lp, head].set(
+                jnp.where(do, g, old_v)),
+            ring_time=st["ring_time"].at[lp, head].set(
+                jnp.where(do, t_now, st["ring_time"][lp, head])),
+            ring_head=st["ring_head"].at[lp].set(
+                jnp.where(do, (head + 1) % R, head)),
+            ring_fill=st["ring_fill"].at[lp].add(
+                (do & ~full).astype(jnp.int32)),
+            total=st["total"].at[lp].add(do.astype(jnp.int64)),
+        )
+        # X window start = timestamp of the oldest live element
+        oldest = jnp.where(st["ring_fill"][lp] >= R,
+                           st["ring_time"][lp, st["ring_head"][lp]],
+                           st["ring_time"][lp, 0])
+        st["win_start"] = st["win_start"].at[lp].set(
+            jnp.where(active, oldest, st["win_start"][lp]))
+        return st
+
+    counts, sums = st["counts"], st["sums"]
+    if policy.hist_decay < 1.0:
+        # exponential recency bias (beyond-paper, paper §5 future work):
+        # old evidence fades at ``hist_decay`` per new sample on that port
+        d = jnp.where(do, policy.hist_decay, 1.0)[:, None]
+        counts = counts.at[lp].multiply(d)
+        sums = sums.at[lp].multiply(d)
+        # the budget window X follows the effective sample horizon
+        # (~1/(1-decay) samples): pull win_start toward t_now at the same
+        # rate so N = l*X/t_w shrinks consistently with the history
+        ws = st["win_start"][lp]
+        new_ws = ws + (1 - policy.hist_decay) * (t_now - ws)
+        st = dict(st, win_start=st["win_start"].at[lp].set(
+            jnp.where(do, new_ws, ws)))
+    counts = counts.at[lp, b].add(inc)
+    sums = sums.at[lp, b].add(g)
+    total = st["total"].at[lp].add(do.astype(jnp.int64))
+    st = dict(st, counts=counts, sums=sums, total=total)
+
+    if policy.hist_mode == "self_clear":
+        clear = active & (total[lp] >= policy.hist_clear_n)
+        zrow = jnp.zeros((lp.shape[0], policy.hist_bins), jnp.float64)
+        st["counts"] = st["counts"].at[lp].set(
+            jnp.where(clear[:, None], zrow, st["counts"][lp]))
+        st["sums"] = st["sums"].at[lp].set(
+            jnp.where(clear[:, None], zrow, st["sums"][lp]))
+        st["total"] = st["total"].at[lp].set(
+            jnp.where(clear, 0, st["total"][lp]))
+        st["win_start"] = st["win_start"].at[lp].set(
+            jnp.where(clear, t_now, st["win_start"][lp]))
+    return st
+
+
+def record_hops(st, lp, rem_hops, active, policy):
+    h = jnp.clip(rem_hops, 0, MAXH - 1)
+    return dict(st, hops=st["hops"].at[lp, h].add(active.astype(jnp.int64)))
+
+
+def record_outcomes(st, lp, miss, ratio, active, policy):
+    """PerfBoundCorrect shift register + ratio FIFO (slot-aligned)."""
+    nr = policy.n_r
+    head = st["reg_head"][lp]
+    bit = jnp.uint32(1) << head.astype(jnp.uint32)
+    reg = st["reg"][lp]
+    new_reg = jnp.where(miss, reg | bit, reg & ~bit)
+    lr = jnp.where(miss, jnp.log(jnp.maximum(ratio, 1e-12)), 0.0)
+    return dict(
+        st,
+        reg=st["reg"].at[lp].set(jnp.where(active, new_reg, reg)),
+        ratio_log=st["ratio_log"].at[lp, head].set(
+            jnp.where(active, lr, st["ratio_log"][lp, head])),
+        reg_head=st["reg_head"].at[lp].set(
+            jnp.where(active, (head + 1) % nr, head)),
+        n_seen=st["n_seen"].at[lp].set(
+            jnp.where(active, jnp.minimum(st["n_seen"][lp] + 1, nr),
+                      st["n_seen"][lp])),
+    )
+
+
+# ---------------------------------------------------------------------------
+# t_PDT computation (rowwise; also the kernel oracle)
+# ---------------------------------------------------------------------------
+
+
+def l_factor(hops, bound):
+    """hops: (..., H) counts of remaining-hop distances.  Eq. 1."""
+    tot = hops.sum(-1)
+    h = jnp.arange(hops.shape[-1], dtype=jnp.float64).at[0].set(1.0)
+    p = hops / jnp.maximum(tot, 1)[..., None]
+    l = bound * (p / h).sum(-1)
+    # no history yet -> most conservative correction (distance 1)
+    return jnp.where(tot > 0, l, bound)
+
+
+def tpdt_select(counts, sums, N, total, policy):
+    """PerfBound bin selection (vectorized over leading dims).
+
+    From the highest bin downwards accumulate counts; pick the leftmost bin
+    whose tail-accumulation is <= N; t_PDT = mean of that bin.
+    """
+    centers = bin_centers(policy)
+    rcum = jnp.cumsum(counts[..., ::-1], axis=-1)[..., ::-1]
+    feasible = rcum <= N[..., None]
+    found = feasible.any(-1)
+    j = jnp.argmax(feasible, axis=-1)
+    cj = jnp.take_along_axis(counts, j[..., None], -1)[..., 0]
+    sj = jnp.take_along_axis(sums, j[..., None], -1)[..., 0]
+    mean = jnp.where(cj > 0, sj / jnp.maximum(cj, 1e-30), centers[j])
+    t = jnp.where(found, mean, policy.max_tpdt)
+    return jnp.where(total > 0, t, policy.tpdt_init)
+
+
+def pbc_cf(reg, ratio_log, n_seen, policy):
+    """Corrective factor cf = miss% * geomean(miss ratios)."""
+    nr = policy.n_r
+    bits = (reg[..., None] >> jnp.arange(nr, dtype=jnp.uint32)) & 1
+    bits = bits.astype(jnp.float64)
+    miss_cnt = bits.sum(-1)
+    n = jnp.maximum(n_seen, 1)
+    miss_pct = miss_cnt / n
+    gmean = jnp.exp((bits * ratio_log).sum(-1) / jnp.maximum(miss_cnt, 1.0))
+    return miss_pct * jnp.where(miss_cnt > 0, gmean, 1.0)
+
+
+def compute_tpdt(st, lp, t_now, t_w, policy):
+    """Recalculate t_PDT for link rows ``lp`` at time ``t_now``.  (K,)->(K,)."""
+    counts = st["counts"][lp]
+    sums = st["sums"][lp]
+    total = st["total"][lp]
+    X = jnp.maximum(t_now - st["win_start"][lp], 0.0)
+    l = l_factor(st["hops"][lp], policy.bound)
+    N = l * X / t_w
+    t = tpdt_select(counts, sums, N, total, policy)
+    if policy.kind == "perfbound_correct":
+        cf = pbc_cf(st["reg"][lp], st["ratio_log"][lp], st["n_seen"][lp],
+                    policy)
+        if policy.cf_mode == "uplift":
+            t = t * (1.0 + cf)
+        else:
+            t = t * jnp.maximum(cf, 1.0)
+        t = jnp.minimum(t, policy.max_tpdt)
+    return t
+
+
+def compute_tpdt_all(st, t_now, t_w, policy):
+    """Batched periodic recalculation over every link (kernel-accelerated
+    variant lives in repro.kernels.ops.tpdt_select_op)."""
+    P = st["counts"].shape[0]
+    return compute_tpdt(st, jnp.arange(P), t_now, t_w, policy)

@@ -1,0 +1,326 @@
+"""Coupled network power simulator: a ``lax.scan`` over messages.
+
+Each scan step walks one message along its (<=5-hop) minimal route with a
+cut-through timing model, checks/updates every traversed link's EEE state
+(PDT timers, wake penalties), feeds the PerfBound predictors, and integrates
+per-link wake/sleep time for energy accounting.
+
+TPU-native layout: per-hop state reads are gathered up front (a message's
+route never repeats a link), the 5-hop time chain runs on registers, and all
+state writes land as batched scatters.  A dummy row (index P) absorbs writes
+from padded/inactive hops so scatters never race.
+
+Execution-time semantics come from the phase-structured replay
+(`simulate_trace`): per-node ready times advance across trace steps with
+message-delivery dependencies — makespan overhead, packet latency, and energy
+are measured exactly as in §4 of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial, lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import perfbound as pb
+from repro.core.eee import Policy, PowerModel
+
+MAX_HOPS = 5
+
+
+# ---------------------------------------------------------------------------
+# Network state
+# ---------------------------------------------------------------------------
+
+
+def init_net(n_links, policy: Policy):
+    P = n_links + 1  # +1 dummy row absorbing masked writes
+    # PDT timers are armed at t=0 (ports start awake, counting down) — the
+    # same convention as the decoupled per-port replay, so both paths see
+    # identical first-arrival semantics.
+    dl0 = float(pb._initial_tpdt(policy))
+    return {
+        "dir_free": jnp.zeros((2 * n_links + 1,), jnp.float64),
+        "last_end": jnp.zeros((P,), jnp.float64),
+        "deadline": jnp.full((P,), dl0, jnp.float64),
+        "time_wake": jnp.zeros((P,), jnp.float64),
+        "time_sleep": jnp.zeros((P,), jnp.float64),
+        "n_wake": jnp.zeros((P,), jnp.int64),
+        "n_hit": jnp.zeros((P,), jnp.int64),
+        "n_miss": jnp.zeros((P,), jnp.int64),
+        "pred": pb.init_state(P, policy),
+    }
+
+
+# ---------------------------------------------------------------------------
+# One message
+# ---------------------------------------------------------------------------
+
+
+def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int):
+    links, dirs, nhops, t_inj, nbytes, valid = msg
+    H = links.shape[-1]           # route width (Megafly 5, fat-tree 6, ...)
+    st = policy.state
+    t_w = st.t_w + policy.sync_overhead
+    t_s = st.t_s
+
+    active = (jnp.arange(H) < nhops) & valid & (links >= 0)
+    lp = jnp.where(active, links, n_links)                 # dummy row when off
+    dp = jnp.where(active, 2 * links + dirs, 2 * n_links)
+    t_ser = nbytes / pm.link_bandwidth
+
+    free = net["dir_free"][dp]
+    last = net["last_end"][lp]
+    dl = net["deadline"][lp]
+    tpdt_prev = net["pred"]["tpdt"][lp]
+
+    # ---- unrolled 5-hop time chain (register-only) -----------------------
+    t_head = t_inj
+    t_avail = jnp.zeros((H,), jnp.float64)
+    t_start = jnp.zeros((H,), jnp.float64)
+    delivery = t_inj
+    for h in range(H):
+        ta = jnp.maximum(t_head, free[h])
+        asleep = ta >= dl[h]
+        in_down = asleep & (ta < dl[h] + t_s)
+        pen = jnp.where(
+            asleep, jnp.where(in_down, dl[h] + t_s - ta, 0.0) + t_w, 0.0)
+        ts_ = ta + pen
+        te_ = ts_ + t_ser
+        t_avail = t_avail.at[h].set(ta)
+        t_start = t_start.at[h].set(ts_)
+        t_head = jnp.where(active[h], ts_ + pm.switch_latency, t_head)
+        delivery = jnp.where(active[h], te_, delivery)
+
+    t_end = t_start + t_ser
+    asleep = t_avail >= dl
+    in_down = asleep & (t_avail < dl + t_s)
+    gap = t_avail - last
+    new_last = jnp.maximum(last, t_end)
+
+    # ---- energy time integration (frontier scheme) ------------------------
+    # ``last_end`` is the accounting frontier: everything before it is
+    # already integrated.  awake case: the whole span frontier..t_end is at
+    # wake power (idle-awake + transmission); overlap with the opposite
+    # direction can make t_end < frontier, in which case nothing is added.
+    # asleep case: PDT tail (frontier..deadline) + down transition + wake
+    # transition + transmission at wake power; the remainder sleeps (zero if
+    # the packet lands during the down transition).
+    wake_add = jnp.where(asleep,
+                         (dl - last) + t_s + t_w + t_ser,
+                         jnp.maximum(new_last - last, 0.0))
+    sleep_add = jnp.where(asleep & ~in_down,
+                          jnp.maximum(t_avail - (dl + t_s), 0.0), 0.0)
+    a = active.astype(jnp.float64)
+    net = dict(
+        net,
+        time_wake=net["time_wake"].at[lp].add(wake_add * a),
+        time_sleep=net["time_sleep"].at[lp].add(sleep_add * a),
+        n_wake=net["n_wake"].at[lp].add((asleep & active).astype(jnp.int64)),
+        n_miss=net["n_miss"].at[lp].add((asleep & active).astype(jnp.int64)),
+        n_hit=net["n_hit"].at[lp].add((~asleep & active).astype(jnp.int64)),
+    )
+
+    # ---- occupancy / transmission-end bookkeeping -------------------------
+    net["dir_free"] = net["dir_free"].at[dp].add(
+        jnp.maximum(t_end - free, 0.0) * a)
+    net["last_end"] = net["last_end"].at[lp].add((new_last - last) * a)
+
+    # ---- predictors --------------------------------------------------------
+    pred = net["pred"]
+    if policy.adaptive or policy.record_hist:
+        pred = pb.record_gaps(pred, lp, gap, t_avail, active, policy)
+        pred = pb.record_hops(pred, lp, nhops - jnp.arange(H), active, policy)
+    if policy.kind == "perfbound_correct":
+        ratio = gap / jnp.maximum(tpdt_prev, 1e-12)
+        pred = pb.record_outcomes(pred, lp, asleep, ratio, active, policy)
+    if policy.adaptive:
+        new_tpdt = pb.compute_tpdt(pred, lp, t_end, st.t_w, policy)
+        pred = dict(pred, tpdt=pred["tpdt"].at[lp].set(
+            jnp.where(active, new_tpdt, pred["tpdt"][lp])))
+    net["pred"] = pred
+
+    # deadline = end of PDT countdown after the latest transmission
+    tpdt_now = net["pred"]["tpdt"][lp]
+    new_dl = jnp.where(active, new_last + tpdt_now, dl)
+    net["deadline"] = net["deadline"].at[lp].add(new_dl - dl)
+
+    lat = jnp.where(valid & (nhops > 0), delivery - t_inj, 0.0)
+    events = (lp, t_start, t_end, active)
+    return net, (delivery, lat, events)
+
+
+@lru_cache(maxsize=None)
+def _compiled_chunk(policy: Policy, pm: PowerModel, n_links: int,
+                    collect_events: bool):
+    @partial(jax.jit, donate_argnums=(0,))
+    def run(net, msgs):
+        def step(net, m):
+            net, (d, lat, ev) = _message_step(net, m, policy, pm, n_links)
+            out = (d, lat, ev) if collect_events else (d, lat)
+            return net, out
+        return lax.scan(step, net, msgs)
+    return run
+
+
+def sim_chunk(net, msgs, policy, pm, n_links, collect_events=False):
+    """msgs: tuple of arrays (links (M,5), dirs, nhops, t_inj, bytes, valid)."""
+    return _compiled_chunk(policy, pm, n_links, collect_events)(net, msgs)
+
+
+# ---------------------------------------------------------------------------
+# Close-out + energy summary
+# ---------------------------------------------------------------------------
+
+
+def close_out(net, t_end_sim, policy: Policy, n_links: int):
+    st = policy.state
+    last = net["last_end"][:n_links]
+    dl = net["deadline"][:n_links]
+    t_end_sim = jnp.maximum(t_end_sim, last.max())
+    sleeps = dl + st.t_s < t_end_sim
+    wake_extra = jnp.where(sleeps, (dl - last) + st.t_s, t_end_sim - last)
+    sleep_extra = jnp.where(sleeps, t_end_sim - dl - st.t_s, 0.0)
+    return (net["time_wake"][:n_links] + jnp.maximum(wake_extra, 0.0),
+            net["time_sleep"][:n_links] + jnp.maximum(sleep_extra, 0.0))
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    mean_latency: float
+    max_latency: float
+    n_messages: int
+    link_energy: float
+    switch_energy: float
+    node_energy: float
+    total_energy: float
+    asleep_frac: float          # mean fraction of time links spent asleep
+    n_wake_transitions: int
+    hits: int
+    misses: int
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def summarize(net, t_end, busy_node_secs, lat_sum, lat_max, n_msgs,
+              policy: Policy, pm: PowerModel, topo) -> SimResult:
+    tw, ts_ = close_out(net, t_end, policy, topo.n_links)
+    frac = policy.state.power_frac
+    link_e = float(2 * pm.port_power * (tw.sum() + frac * ts_.sum()))
+    switch_e = float(pm.switch_power * topo.n_switches * t_end)
+    node_e = float(pm.node_power_min * topo.n_nodes * t_end
+                   + (pm.node_power_max - pm.node_power_min) * busy_node_secs)
+    total_t = tw.sum() + ts_.sum()
+    return SimResult(
+        makespan=float(t_end),
+        mean_latency=float(lat_sum / max(n_msgs, 1)),
+        max_latency=float(lat_max),
+        n_messages=int(n_msgs),
+        link_energy=link_e,
+        switch_energy=switch_e,
+        node_energy=node_e,
+        total_energy=link_e + switch_e + node_e,
+        asleep_frac=float(ts_.sum() / jnp.maximum(total_t, 1e-30)),
+        n_wake_transitions=int(net["n_wake"][:topo.n_links].sum()),
+        hits=int(net["n_hit"][:topo.n_links].sum()),
+        misses=int(net["n_miss"][:topo.n_links].sum()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Phase-structured trace replay (execution-time semantics)
+# ---------------------------------------------------------------------------
+
+
+def _pad_msgs(links, dirs, nhops, t_inj, nbytes, bucket_min=64):
+    M = len(nhops)
+    cap = max(bucket_min, 1 << (max(M - 1, 1)).bit_length())
+    pad = cap - M
+
+    def p(a, fill=0):
+        return np.concatenate([a, np.full((pad,) + a.shape[1:], fill,
+                                          a.dtype)])
+    valid = np.concatenate([np.ones(M, bool), np.zeros(pad, bool)])
+    return (jnp.asarray(p(links, -1)), jnp.asarray(p(dirs)),
+            jnp.asarray(p(nhops)), jnp.asarray(p(t_inj.astype(np.float64))),
+            jnp.asarray(p(nbytes.astype(np.float64))), jnp.asarray(valid))
+
+
+def simulate_trace(trace, topo, policy: Policy, pm: PowerModel | None = None,
+                   collect_events=False):
+    """Replay a Trace (see repro.traffic.trace) under a policy.
+
+    Returns (SimResult, events) — events is a list of per-step host arrays
+    (link, t_start, t_end) when collect_events, else None.
+    """
+    pm = pm or PowerModel()
+    net = init_net(topo.n_links, policy)
+    ready = np.zeros(topo.n_nodes, np.float64)
+    busy = 0.0
+    lat_sum, lat_max, n_msgs = 0.0, 0.0, 0
+    all_events = [] if collect_events else None
+
+    for step in trace.steps:
+        if step.compute_nodes is not None and len(step.compute_nodes):
+            ready[step.compute_nodes] += step.compute_secs
+            busy += float(step.compute_secs.sum())
+        if step.msgs is not None and len(step.msgs):
+            src = step.msgs[:, 0]
+            dst = step.msgs[:, 1]
+            nbytes = step.msgs[:, 2].astype(np.float64)
+            t_inj = ready[src]
+            order = np.argsort(t_inj, kind="stable")
+            src, dst, nbytes, t_inj = (src[order], dst[order],
+                                       nbytes[order], t_inj[order])
+            links, dirs, nhops = topo.routes(src, dst)
+            msgs = _pad_msgs(links, dirs, nhops, t_inj, nbytes)
+            net, out = sim_chunk(net, msgs, policy, pm, topo.n_links,
+                                 collect_events)
+            delivery = np.asarray(out[0])[: len(src)]
+            lat = np.asarray(out[1])[: len(src)]
+            np.maximum.at(ready, dst, delivery)
+            lat_sum += float(lat.sum())
+            lat_max = max(lat_max, float(lat.max(initial=0.0)))
+            n_msgs += len(src)
+            if collect_events:
+                lp, ts_, te_, act = (np.asarray(x) for x in out[2])
+                m = act[: len(src)].astype(bool)
+                all_events.append((lp[: len(src)][m], ts_[: len(src)][m],
+                                   te_[: len(src)][m]))
+        if step.barrier:
+            nodes = trace.nodes
+            ready[nodes] = ready[nodes].max()
+
+    t_end = float(ready[trace.nodes].max()) if len(trace.nodes) else 0.0
+    res = summarize(net, t_end, busy, lat_sum, lat_max, n_msgs,
+                    policy, pm, topo)
+    return res, all_events
+
+
+def compare_policies(trace, topo, policies: dict, pm: PowerModel | None = None,
+                     baseline: str = "baseline"):
+    """Run a trace under several policies; report overheads vs the baseline
+    (always-on) run — the paper's evaluation protocol (§4)."""
+    pm = pm or PowerModel()
+    base_policy = Policy(kind="none")
+    base, _ = simulate_trace(trace, topo, base_policy, pm)
+    out = {baseline: dict(base.as_dict(), exec_overhead_pct=0.0,
+                          latency_overhead_pct=0.0, energy_saved_pct=0.0,
+                          link_energy_saved_pct=0.0)}
+    for name, pol in policies.items():
+        r, _ = simulate_trace(trace, topo, pol, pm)
+        out[name] = dict(
+            r.as_dict(),
+            exec_overhead_pct=100 * (r.makespan / base.makespan - 1),
+            latency_overhead_pct=100 * (r.mean_latency / base.mean_latency - 1)
+            if base.mean_latency else 0.0,
+            energy_saved_pct=100 * (1 - r.total_energy / base.total_energy),
+            link_energy_saved_pct=100 * (1 - r.link_energy / base.link_energy),
+        )
+    return out

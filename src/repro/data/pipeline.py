@@ -1,0 +1,111 @@
+"""Synthetic LM data pipeline: sharded, deterministic, prefetched.
+
+The stream is a first-order Markov chain over the vocabulary with a sparse
+transition structure, so a model CAN learn it (loss decreases measurably
+within a few hundred steps — the e2e training example asserts this), yet
+generation is pure numpy and fully deterministic given (seed, shard, step).
+
+Sharding contract: ``SyntheticLM(..., shard=i, num_shards=n)`` yields the
+i-th slice of every global batch, so n data-parallel hosts construct the
+identical global batch independently — the layout a multi-pod input pipeline
+needs (no host broadcast).  Prefetching runs on a daemon thread with a small
+bounded queue.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+
+class SyntheticLM:
+    """Deterministic Markov-chain token stream.
+
+    Each step's batch is generated from ``hash(seed, step, shard)`` so
+    restarting from a checkpoint at step k reproduces the exact remaining
+    stream (checkpoint/restart invariance, tested).
+    """
+
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 *, seed: int = 0, shard: int = 0, num_shards: int = 1,
+                 branch: int = 4):
+        assert global_batch % num_shards == 0
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.batch = global_batch // num_shards
+        self.seed = seed
+        self.shard = shard
+        self.num_shards = num_shards
+        # sparse transition table: each token can be followed by ``branch``
+        # successors (uniform) — entropy log2(branch) bits/token, learnable.
+        rng = np.random.default_rng(seed)
+        self.next_tok = rng.integers(
+            0, vocab_size, size=(vocab_size, branch), dtype=np.int32)
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        B, S = self.batch, self.seq_len
+        toks = np.empty((B, S + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab_size, B)
+        choices = rng.integers(0, self.next_tok.shape[1], (B, S))
+        for t in range(S):
+            toks[:, t + 1] = self.next_tok[toks[:, t], choices[:, t]]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class _Prefetcher:
+    """Bounded-queue background prefetch over ``source.batch_at(step)``."""
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            b = self.source.batch_at(step)
+            while not self._stop.is_set():
+                try:
+                    self.q.put((step, b), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __next__(self):
+        return self.q.get()
+
+    def __iter__(self):
+        return self
+
+    def close(self):
+        self._stop.set()
+
+
+def make_pipeline(cfg, seq_len: int, global_batch: int, *, seed: int = 0,
+                  shard: int = 0, num_shards: int = 1, start_step: int = 0,
+                  prefetch: int = 2):
+    """Returns an iterator of (step, {'tokens','labels'}) numpy batches."""
+    src = SyntheticLM(cfg.vocab_size, seq_len, global_batch, seed=seed,
+                      shard=shard, num_shards=num_shards)
+    if prefetch:
+        return _Prefetcher(src, start_step=start_step, depth=prefetch)
+    def _gen():
+        step = start_step
+        while True:
+            yield step, src.batch_at(step)
+            step += 1
+    return _gen()

@@ -1,0 +1,181 @@
+"""Fault tolerance and straggler mitigation (library layer).
+
+On a 1000-node fleet these hooks sit between the cluster scheduler and the
+training loop; everything here is deterministic and unit-testable on one
+host — failures and step timings are injected, never sampled from real
+hardware.  Three pieces:
+
+* ``StragglerMonitor`` — EWMA per-worker step times; flags workers slower
+  than ``threshold`` x the fleet median and proposes shard reassignment
+  (slowest worker swaps data shard with the fastest, bounded frequency).
+* ``plan_elastic_mesh`` — given a surviving device count, pick the largest
+  usable (data, model) mesh shape that preserves the model-parallel degree
+  (TP degree is baked into compiled weights layouts; DP shrinks freely).
+* ``run_with_recovery`` — drives step functions under injected failures:
+  on failure, restore from the newest checkpoint and replay.  Exercises the
+  checkpoint/restart invariance the data pipeline guarantees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StragglerReport:
+    step: int
+    stragglers: List[int]
+    median: float
+    per_worker: Dict[int, float]
+    reassignment: Optional[tuple] = None   # (slow_worker, fast_worker)
+
+
+class StragglerMonitor:
+    """EWMA step-time tracking with reassignment proposals.
+
+    ``observe(step, {worker: seconds})`` returns a StragglerReport when any
+    worker's smoothed time exceeds ``threshold`` x median; proposals are
+    rate-limited to one per ``cooldown`` steps.
+    """
+
+    def __init__(self, n_workers: int, threshold: float = 1.5,
+                 alpha: float = 0.3, cooldown: int = 20, warmup: int = 3):
+        self.n = n_workers
+        self.threshold = threshold
+        self.alpha = alpha
+        self.cooldown = cooldown
+        self.warmup = warmup
+        self.ewma = np.zeros(n_workers)
+        self.count = np.zeros(n_workers, np.int64)
+        self.last_action = -10**9
+        self.history: List[StragglerReport] = []
+
+    def observe(self, step: int, times: Dict[int, float]):
+        for w, t in times.items():
+            if self.count[w] == 0:
+                self.ewma[w] = t
+            else:
+                self.ewma[w] = (1 - self.alpha) * self.ewma[w] + self.alpha * t
+            self.count[w] += 1
+        ready = self.count >= self.warmup
+        if not ready.any():
+            return None
+        med = float(np.median(self.ewma[ready]))
+        slow = [int(w) for w in np.nonzero(
+            ready & (self.ewma > self.threshold * med))[0]]
+        if not slow:
+            return None
+        report = StragglerReport(
+            step=step, stragglers=slow, median=med,
+            per_worker={int(w): float(self.ewma[w])
+                        for w in range(self.n) if ready[w]})
+        if step - self.last_action >= self.cooldown:
+            worst = int(max(slow, key=lambda w: self.ewma[w]))
+            fastest = int(np.argmin(np.where(ready, self.ewma, np.inf)))
+            if fastest != worst:
+                report.reassignment = (worst, fastest)
+                self.last_action = step
+        self.history.append(report)
+        return report
+
+
+# ---------------------------------------------------------------------------
+# Elastic mesh planning
+# ---------------------------------------------------------------------------
+
+
+def plan_elastic_mesh(n_devices: int, model_degree: int,
+                      min_data: int = 1) -> tuple:
+    """Largest (data, model) shape with the same TP degree that fits in
+    ``n_devices``.  Returns (data, model) — data is the free axis.
+
+    A TP-degree change forces a weight-layout reshard (still possible via
+    the topology-independent checkpoint, but slower), so elasticity keeps
+    TP fixed and shrinks/grows DP, the standard production policy.
+    """
+    if model_degree <= 0:
+        raise ValueError("model_degree must be positive")
+    data = n_devices // model_degree
+    if data < min_data:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_degree={model_degree}")
+    return (data, model_degree)
+
+
+# ---------------------------------------------------------------------------
+# Failure injection + recovery driver
+# ---------------------------------------------------------------------------
+
+
+class WorkerFailure(RuntimeError):
+    def __init__(self, step, worker):
+        super().__init__(f"worker {worker} failed at step {step}")
+        self.step = step
+        self.worker = worker
+
+
+@dataclass
+class RecoveryStats:
+    steps_run: int = 0
+    failures: int = 0
+    restores: int = 0
+    wasted_steps: int = 0          # recomputed after restart
+    reassignments: int = 0
+    log: list = field(default_factory=list)
+
+
+def run_with_recovery(step_fn: Callable, state, ckpt, n_steps: int, *,
+                      start_step: int = 0,
+                      fail_at: Dict[int, int] | None = None,
+                      monitor: StragglerMonitor | None = None,
+                      timings_fn: Callable | None = None,
+                      save_every: int = 10,
+                      metadata_fn: Callable | None = None) -> tuple:
+    """Run ``state = step_fn(state, step)`` for ``n_steps`` with checkpoint/
+    restart.  ``fail_at``: {step: worker} injected failures (each fires
+    once).  Returns (state, RecoveryStats).
+    """
+    fail_at = dict(fail_at or {})
+    stats = RecoveryStats()
+    step = start_step
+    last_saved = None
+    # initial checkpoint so step-0 failures are recoverable
+    ckpt.save(state, step, (metadata_fn or (lambda s: {}))(step))
+    last_saved = step
+
+    while step < start_step + n_steps:
+        try:
+            if step in fail_at:
+                worker = fail_at.pop(step)
+                raise WorkerFailure(step, worker)
+            state = step_fn(state, step)
+            stats.steps_run += 1
+            if timings_fn and monitor:
+                rep = monitor.observe(step, timings_fn(step))
+                if rep and rep.reassignment:
+                    stats.reassignments += 1
+                    stats.log.append(("reassign", step, rep.reassignment))
+            step += 1
+            if (step - start_step) % save_every == 0:
+                ckpt.save_async(state, step,
+                                (metadata_fn or (lambda s: {}))(step))
+                last_saved = step
+        except WorkerFailure as e:
+            stats.failures += 1
+            stats.log.append(("failure", e.step, e.worker))
+            ckpt.wait()
+            state, restored_step, _ = ckpt.restore(state)
+            stats.restores += 1
+            stats.wasted_steps += step - restored_step
+            stats.log.append(("restore", restored_step))
+            step = restored_step
+    ckpt.wait()
+    return state, stats

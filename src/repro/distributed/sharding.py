@@ -1,0 +1,172 @@
+"""Sharding rules: parameter, activation, batch, and cache PartitionSpecs.
+
+Mesh axes: optional ``pod`` (cross-pod data parallelism), ``data`` (DP),
+``model`` (TP for attention heads / MLP hidden / vocab, EP for MoE experts,
+SP for long-context KV).  Rules are path-pattern based so every arch family
+shares one table.
+
+Uneven dims (e.g. 56 heads / 16-way TP) rely on GSPMD padding; KV heads
+smaller than the TP degree stay replicated (Megatron GQA convention) by
+sharding the *folded* head*dim axis of the projections instead.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# (regex on 'a/b/c' param path) -> spec for the *unstacked* leaf;
+# stacked block leaves get None prepended automatically.
+_PARAM_RULES = [
+    (r"embed$", P("model", None)),
+    (r"lm_head$", P(None, "model")),
+    (r"pos_embed_(dec|enc)$", P("model", None)),
+    # attention
+    (r"(attn|cross)/w[qkv]$", P(None, "model")),
+    (r"(attn|cross)/wo$", P("model", None)),
+    (r"(attn|cross)/b[qkv]$", P("model")),
+    (r"(attn|cross)/(q|k)_norm$", P(None)),
+    # dense mlp
+    (r"mlp/w[13]$", P(None, "model")),
+    (r"mlp/w2$", P("model", None)),
+    # moe: experts across 'model' (EP)
+    (r"moe/router$", P(None, None)),
+    (r"moe/we[13]$", P("model", None, None)),
+    (r"moe/we2$", P("model", None, None)),
+    # mamba2
+    (r"mamba/in_proj$", P(None, "model")),
+    (r"mamba/conv_w$", P(None, "model")),
+    (r"mamba/conv_b$", P("model")),
+    (r"mamba/(A_log|D|dt_bias)$", P(None)),
+    (r"mamba/ssm_norm$", P("model")),
+    (r"mamba/out_proj$", P("model", None)),
+    # rwkv6
+    (r"tm/w_[rkvg]$", P(None, "model")),
+    (r"tm/w_o$", P("model", None)),
+    (r"tm/w[ab0]$", P(None)),
+    (r"tm/(mu_.|u|ln_x)$", P(None)),
+    (r"cm/w_[kr]$", P(None, "model")),
+    (r"cm/w_v$", P("model", None)),
+    (r"cm/mu_.$", P(None)),
+    # norms and anything else small
+    (r".*", P(None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_spec_tree(params_shape, mesh: Mesh):
+    """PartitionSpec pytree for a param pytree (shapes or arrays)."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        stacked = "blocks" in ps  # scanned layers: leading L dim
+        for pat, spec in _PARAM_RULES:
+            if re.search(pat, ps):
+                tup = tuple(spec)
+                if stacked:
+                    tup = (None,) + tup
+                # trim/extend to the leaf rank
+                rank = len(leaf.shape)
+                tup = tuple(tup[:rank]) + (None,) * max(0, rank - len(tup))
+                # drop axes that do not divide AND are not GSPMD-paddable?
+                # GSPMD pads any uneven dim; keep as-is.
+                return P(*tup)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_spec_tree(params_shape, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, global_batch: int) -> P:
+    """Shard batch over (pod, data) when divisible, else replicate batch."""
+    dp = dp_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in dp]))
+    if global_batch % size == 0:
+        return P(dp)
+    if global_batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P()
+
+
+def batch_shardings(batch_shape_tree, mesh: Mesh, global_batch: int):
+    bspec = batch_spec(mesh, global_batch)
+
+    def one(leaf):
+        rank = len(leaf.shape)
+        return NamedSharding(mesh, P(*(tuple(bspec) + (None,) * (rank - 1))))
+
+    return jax.tree.map(one, batch_shape_tree)
+
+
+def cache_spec_tree(cache_shape, mesh: Mesh, global_batch: int):
+    """KV/state cache shardings.
+
+    Layout (family-dependent leaves):
+      k/v/ck/cv:      (L, B, S, Hkv, dh)  -> shard B over dp, S over model
+      k_local/...:    (L, B, W, Hkv, dh)  -> same
+      conv:           (L, B, W-1, C)      -> C over model
+      ssm:            (L, B, H, N, P)     -> H over model
+      wkv:            (L, B, H, dh, dh)   -> H over model
+      shift_*:        (L, B, D)           -> D over model
+    When B is not divisible by dp (e.g. long_500k, B=1) the batch axis is
+    left unsharded and the sequence axis takes ("data","model") instead.
+    """
+    dp = dp_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in dp]))
+    b_ok = global_batch % size == 0
+    bax = dp if b_ok else None
+    seq_ax = "model" if b_ok else (dp + ("model",)
+                                   if "pod" not in mesh.axis_names
+                                   else ("data", "model"))
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        rank = len(leaf.shape)
+        if re.search(r"(^|/)(k|v|ck|cv|k_local|v_local|k_global|v_global)$",
+                     ps):
+            return P(None, bax, seq_ax, None, None)
+        if ps.endswith("conv"):
+            return P(None, bax, None, "model")
+        if ps.endswith("ssm") or ps.endswith("wkv"):
+            return P(None, bax, "model", None, None)
+        if ps.startswith("shift") or ps.endswith("shift_a") \
+                or ps.endswith("shift_f"):
+            return P(None, bax, "model")
+        return P(*((None,) * rank))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, global_batch: int):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_spec_tree(cache_shape, mesh, global_batch))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,367 @@
+"""Pallas TPU kernel: flash attention (forward) with GQA, causal and
+sliding-window masking — the beyond-paper §Perf optimization for the
+memory-bound train/prefill cells.
+
+Why: the pure-JAX chunked attention materializes every (q-chunk x kv-chunk)
+score tensor in HBM (the dry-run measures ~0.4 GB per chunk pair — the
+dominant HBM-traffic term for train_4k/prefill_32k).  This kernel keeps
+the score tile in VMEM: HBM traffic collapses to reading q/k/v once and
+writing o once per layer.
+
+Layout (per grid step, one (batch*kv-head, q-block) pair):
+  q tile  (Bq, G*dh)   — G = query heads per kv head folded into lanes
+  k/v     (Skv, dh)    — streamed over the kv grid axis, VMEM-resident
+  scores  (G, Bq, Bkv) — VMEM scratch only, never HBM
+
+Grid: (B*Hkv, nq, nk) with nk innermost (sequential accumulation; Pallas
+TPU guarantees sequential grid order on the last axis).  Online softmax
+state (m, l, acc) lives in VMEM scratch, carried across the nk axis.
+
+VMEM per block (defaults Bq=512, Bkv=1024, dh=128, G<=8 at f32):
+  q 0.25 MiB + k/v 1 MiB + acc 2 MiB + scores 4 MiB  ~= 7.5 MiB < 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, block_q, block_kv, seq_q, seq_kv, G):
+    """One (bh, iq, ik) grid step."""
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)          # (Bq, G*dh)
+    k = k_ref[...].astype(jnp.float32)          # (Bkv, dh)
+    v = v_ref[...].astype(jnp.float32)          # (Bkv, dh)
+    Bq, Gdh = q.shape
+    dh = Gdh // G
+    qh = q.reshape(Bq, G, dh).transpose(1, 0, 2)            # (G, Bq, dh)
+
+    s = jax.lax.dot_general(qh, k, (((2,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # (G, Bq, Bkv) + position masks
+    q_pos = iq * block_q + lax.broadcasted_iota(jnp.int32,
+                                                (1, Bq, 1), 1)
+    k_pos = ik * block_kv + lax.broadcasted_iota(jnp.int32,
+                                                 (1, 1, s.shape[-1]), 2)
+    ok = (q_pos < seq_q) & (k_pos < seq_kv)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok, s, NEG)
+
+    m_prev = m_scr[...]                          # (G, Bq)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(ok, p, 0.0)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        out = (acc_scr[...] / l[..., None]).transpose(1, 0, 2) \
+            .reshape(Bq, G * dh)
+        o_ref[...] = out.astype(o_ref.dtype)
+        # logsumexp stats for the backward kernels: L = m + log(l)
+        lse_ref[...] = m_scr[...] + jnp.log(l)
+
+
+def _fold(q, k, v, B, Sq, Skv, Hkv, G, dh, Sqp, Skvp):
+    """(B*Hkv, S, G*dh) layout: kv-head-major batch, heads in lanes."""
+    qr = q.reshape(B, Sq, Hkv, G * dh).transpose(0, 2, 1, 3) \
+          .reshape(B * Hkv, Sq, G * dh)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, dh)
+    if Sqp != Sq:
+        qr = jnp.pad(qr, ((0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skvp != Skv:
+        kr = jnp.pad(kr, ((0, 0), (0, Skvp - Skv), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, Skvp - Skv), (0, 0)))
+    return qr, kr, vr
+
+
+def _geom(q, k, block_q, block_kv):
+    B, Sq, H, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert H % Hkv == 0
+    G = H // Hkv
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    nq = pl.cdiv(Sq, bq)
+    nk = pl.cdiv(Skv, bkv)
+    return B, Sq, Skv, H, Hkv, G, dh, bq, bkv, nq, nk, nq * bq, nk * bkv
+
+
+def flash_attention_fwd_pallas(q, k, v, *, causal=True, window=None,
+                               block_q=512, block_kv=1024, interpret=False):
+    """Forward + logsumexp stats.  Returns (o (B,Sq,H,dh), lse (BH,G,Sqp))."""
+    B, Sq, Skv, H, Hkv, G, dh, bq, bkv, nq, nk, Sqp, Skvp = _geom(
+        q, k, block_q, block_kv)
+    scale = 1.0 / math.sqrt(dh)
+    qr, kr, vr = _fold(q, k, v, B, Sq, Skv, Hkv, G, dh, Sqp, Skvp)
+
+    out, lse = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, block_q=bq, block_kv=bkv,
+                          seq_q=Sq, seq_kv=Skv, G=G),
+        grid=(B * Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, bq, G * dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, bkv, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, bkv, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bq, G * dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, G, bq), lambda b, i, j: (b, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hkv, Sqp, G * dh), q.dtype),
+            jax.ShapeDtypeStruct((B * Hkv, G, Sqp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu_scratch((G, bq)),
+            pltpu_scratch((G, bq)),
+            pltpu_scratch((G, bq, dh)),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    o = out[:, :Sq].reshape(B, Hkv, Sq, G, dh).transpose(0, 2, 1, 3, 4)
+    return o.reshape(B, Sq, H, dh), lse
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=None,
+                           block_q=512, block_kv=1024, interpret=False):
+    """q: (B, Sq, H, dh); k/v: (B, Skv, Hkv, dh).  Returns (B, Sq, H, dh).
+
+    GQA folded: H = G * Hkv query heads share each kv head.  No dropout,
+    no bias — matches repro.models.layers.attention_op semantics for the
+    self-attention train/prefill path.
+    """
+    return flash_attention_fwd_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_kv=block_kv,
+                                      interpret=interpret)[0]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (FA2-style two-pass: dk/dv over kv blocks, dq over q)
+# ---------------------------------------------------------------------------
+
+
+def _masked_p(qh, k, lse, *, scale, causal, window, iq, ik, block_q,
+              block_kv, seq_q, seq_kv):
+    """Recompute p = exp(s - L) with position masks.  qh: (G,Bq,dh)."""
+    s = jax.lax.dot_general(qh, k, (((2,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    Bq, Bkv = s.shape[1], s.shape[2]
+    q_pos = iq * block_q + lax.broadcasted_iota(jnp.int32, (1, Bq, 1), 1)
+    k_pos = ik * block_kv + lax.broadcasted_iota(jnp.int32, (1, 1, Bkv), 2)
+    ok = (q_pos < seq_q) & (k_pos < seq_kv)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= q_pos - k_pos < window
+    p = jnp.exp(jnp.where(ok, s, NEG) - lse[..., None])
+    return jnp.where(ok, p, 0.0)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dcap_ref,
+                    dk_ref, dv_ref, dk_scr, dv_scr, *,
+                    scale, causal, window, block_q, block_kv, seq_q,
+                    seq_kv, G):
+    """grid (BH, nk, nq) — q blocks innermost, accumulate dk/dv in VMEM."""
+    ik = pl.program_id(1)
+    iq = pl.program_id(2)
+    nq = pl.num_programs(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[...].astype(jnp.float32)
+    Bq, Gdh = q.shape
+    dh = Gdh // G
+    qh = q.reshape(Bq, G, dh).transpose(1, 0, 2)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    doh = do_ref[...].astype(jnp.float32).reshape(Bq, G, dh) \
+        .transpose(1, 0, 2)
+    lse = lse_ref[...]                        # (G, Bq)
+    dcap = dcap_ref[...]                      # (G, Bq)  D = rowsum(do*o)
+
+    p = _masked_p(qh, k, lse, scale=scale, causal=causal, window=window,
+                  iq=iq, ik=ik, block_q=block_q, block_kv=block_kv,
+                  seq_q=seq_q, seq_kv=seq_kv)          # (G,Bq,Bkv)
+    # dv += sum_G p^T do
+    dv_g = jax.lax.dot_general(p, doh, (((1,), (1,)), ((0,), (0,))))
+    dv_scr[...] += dv_g.sum(axis=0)
+    # ds = p * (do v^T - D) * scale;  dk += sum_G ds^T q
+    dp = jax.lax.dot_general(doh, v, (((2,), (1,)), ((), ())))
+    ds = p * (dp - dcap[..., None]) * scale
+    dk_g = jax.lax.dot_general(ds, qh, (((1,), (1,)), ((0,), (0,))))
+    dk_scr[...] += dk_g.sum(axis=0)
+
+    @pl.when(iq == nq - 1)
+    def _finish():
+        dk_ref[...] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[...] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dcap_ref,
+                   dq_ref, dq_scr, *, scale, causal, window, block_q,
+                   block_kv, seq_q, seq_kv, G):
+    """grid (BH, nq, nk) — kv blocks innermost, accumulate dq in VMEM."""
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q = q_ref[...].astype(jnp.float32)
+    Bq, Gdh = q.shape
+    dh = Gdh // G
+    qh = q.reshape(Bq, G, dh).transpose(1, 0, 2)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    doh = do_ref[...].astype(jnp.float32).reshape(Bq, G, dh) \
+        .transpose(1, 0, 2)
+    lse = lse_ref[...]
+    dcap = dcap_ref[...]
+
+    p = _masked_p(qh, k, lse, scale=scale, causal=causal, window=window,
+                  iq=iq, ik=ik, block_q=block_q, block_kv=block_kv,
+                  seq_q=seq_q, seq_kv=seq_kv)
+    dp = jax.lax.dot_general(doh, v, (((2,), (1,)), ((), ())))
+    ds = p * (dp - dcap[..., None]) * scale
+    dq_scr[...] += jax.lax.dot_general(ds, k, (((2,), (0,)), ((), ())))
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        out = dq_scr[...].transpose(1, 0, 2).reshape(Bq, G * dh)
+        dq_ref[...] = out.astype(dq_ref.dtype)
+
+
+def flash_attention_bwd_pallas(q, k, v, o, lse, do, *, causal=True,
+                               window=None, block_q=512, block_kv=1024,
+                               interpret=False):
+    """Returns (dq, dk, dv) with the input shapes/dtypes.  ``lse`` is the
+    (BH, G, Sqp) stats tensor from flash_attention_fwd_pallas."""
+    B, Sq, Skv, H, Hkv, G, dh, bq, bkv, nq, nk, Sqp, Skvp = _geom(
+        q, k, block_q, block_kv)
+    scale = 1.0 / math.sqrt(dh)
+    qr, kr, vr = _fold(q, k, v, B, Sq, Skv, Hkv, G, dh, Sqp, Skvp)
+    dor = _fold(do, k, v, B, Sq, Skv, Hkv, G, dh, Sqp, Skvp)[0]
+    # D = rowsum(do * o) per (head, q position) — cheap, fused by XLA
+    dcap = (do.astype(jnp.float32) * o.astype(jnp.float32)).sum(-1)
+    dcap = dcap.reshape(B, Sq, Hkv, G).transpose(0, 2, 3, 1) \
+        .reshape(B * Hkv, G, Sq)
+    if Sqp != Sq:
+        dcap = jnp.pad(dcap, ((0, 0), (0, 0), (0, Sqp - Sq)))
+
+    kw = dict(scale=scale, causal=causal, window=window, block_q=bq,
+              block_kv=bkv, seq_q=Sq, seq_kv=Skv, G=G)
+    common_in = [
+        pl.BlockSpec((None, bq, G * dh), lambda b, i, j: (b, j, 0)),
+        pl.BlockSpec((None, bkv, dh), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((None, bkv, dh), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((None, bq, G * dh), lambda b, i, j: (b, j, 0)),
+        pl.BlockSpec((None, G, bq), lambda b, i, j: (b, 0, j)),
+        pl.BlockSpec((None, G, bq), lambda b, i, j: (b, 0, j)),
+    ]
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, **kw),
+        grid=(B * Hkv, nk, nq),
+        in_specs=common_in,
+        out_specs=[pl.BlockSpec((None, bkv, dh), lambda b, i, j: (b, i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((B * Hkv, Skvp, dh), k.dtype)] * 2,
+        scratch_shapes=[pltpu_scratch((bkv, dh)), pltpu_scratch((bkv, dh))],
+        interpret=interpret,
+    )(qr, kr, vr, dor, lse, dcap)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, **kw),
+        grid=(B * Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, bq, G * dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, bkv, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, bkv, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, bq, G * dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, G, bq), lambda b, i, j: (b, 0, i)),
+            pl.BlockSpec((None, G, bq), lambda b, i, j: (b, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, G * dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, Sqp, G * dh), q.dtype),
+        scratch_shapes=[pltpu_scratch((G, bq, dh))],
+        interpret=interpret,
+    )(qr, kr, vr, dor, lse, dcap)
+
+    def unfold_q(x):
+        x = x[:, :Sq].reshape(B, Hkv, Sq, G, dh).transpose(0, 2, 1, 3, 4)
+        return x.reshape(B, Sq, H, dh)
+
+    def unfold_kv(x):
+        return x[:, :Skv].reshape(B, Hkv, Skv, dh).transpose(0, 2, 1, 3)
+
+    return unfold_q(dq), unfold_kv(dk), unfold_kv(dv)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper (custom_vjp)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=None, block_q=512,
+                    block_kv=1024, interpret=False):
+    return flash_attention_fwd_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv, interpret=interpret)[0]
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_kv, interpret):
+    o, lse = flash_attention_fwd_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_kv=block_kv, interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, window, block_q, block_kv, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd_pallas(
+        q, k, v, o, lse, do, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def pltpu_scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

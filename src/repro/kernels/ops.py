@@ -1,0 +1,87 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs as traced JAX ops, validating the exact pallas_call/BlockSpec
+program against the ref.py oracles.  On TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.hist_update import hist_update_pallas
+from repro.kernels.port_energy import port_energy_pallas
+from repro.kernels.tpdt_select import tpdt_select_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("max_tpdt", "tpdt_init", "use_ref"))
+def tpdt_select_op(counts, sums, N, total, centers, *, max_tpdt, tpdt_init,
+                   use_ref=False):
+    f32 = lambda x: x.astype(jnp.float32)
+    if use_ref:
+        return ref.tpdt_select_ref(f32(counts), f32(sums), f32(N), f32(total),
+                                   f32(centers), max_tpdt=max_tpdt,
+                                   tpdt_init=tpdt_init)
+    return tpdt_select_pallas(f32(counts), f32(sums), f32(N), f32(total),
+                              f32(centers), max_tpdt=max_tpdt,
+                              tpdt_init=tpdt_init, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("n_bins", "bin_width", "log_bins",
+                                   "log_min", "log_max", "use_ref"))
+def hist_update_op(gaps, *, n_bins, bin_width, log_bins=False, log_min=1e-7,
+                   log_max=10.0, use_ref=False):
+    g = gaps.astype(jnp.float32)
+    kw = dict(n_bins=n_bins, bin_width=bin_width, log_bins=log_bins,
+              log_min=log_min, log_max=log_max)
+    if use_ref:
+        return ref.hist_update_ref(g, **kw)
+    return hist_update_pallas(g, **kw, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("t_w", "t_s", "use_ref"))
+def port_energy_op(gaps, durs, tpdt, tail, *, t_w, t_s, use_ref=False):
+    f32 = lambda x: x.astype(jnp.float32)
+    if use_ref:
+        return ref.port_energy_ref(f32(gaps), f32(durs), f32(tpdt), f32(tail),
+                                   t_w=t_w, t_s=t_s)
+    return port_energy_pallas(f32(gaps), f32(durs), f32(tpdt), f32(tail),
+                              t_w=t_w, t_s=t_s, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                   "block_kv", "use_ref"))
+def flash_attention_op(q, k, v, *, causal=True, window=None, block_q=512,
+                       block_kv=1024, use_ref=False):
+    """Differentiable flash attention (custom_vjp: Pallas fwd + FA2-style
+    two-pass Pallas bwd)."""
+    from repro.kernels.flash_attn import flash_attention
+    if use_ref:
+        return ref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window)
+    return flash_attention(q, k, v, causal, window, block_q, block_kv,
+                           _interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_ref"))
+def ssd_op(xs, dt, Bc, Cc, A, D, *, chunk=128, use_ref=False):
+    """Mamba2 SSD chunked forward (fresh sequence)."""
+    from repro.kernels.ssd import ssd_pallas
+    if use_ref:
+        return ref.ssd_ref(xs, dt, Bc, Cc, A, D, chunk=chunk)
+    return ssd_pallas(xs, dt, Bc, Cc, A, D, chunk=chunk,
+                      interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_op_vjp(xs, dt, Bc, Cc, A, D, *, chunk=128):
+    """Differentiable SSD: Pallas forward + oracle-recompute backward."""
+    from repro.kernels.ssd import ssd
+    return ssd(xs, dt, Bc, Cc, A, D, chunk, _interpret())

@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every Pallas kernel (shape-for-shape identical)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tpdt_select_ref(counts, sums, N, total, centers, *, max_tpdt, tpdt_init):
+    """PerfBound bin selection.  counts/sums: (P,B) f32; N/total: (P,).
+
+    From the top bin downwards accumulate counts; choose the leftmost bin
+    whose tail accumulation is <= N; t_PDT = mean of that bin (value sum /
+    count, falling back to the bin center when empty).
+    """
+    rcum = jnp.cumsum(counts[:, ::-1], axis=1)[:, ::-1]
+    feas = rcum <= N[:, None]
+    found = feas.any(axis=1)
+    j = jnp.argmax(feas, axis=1)
+    oh = jax.nn.one_hot(j, counts.shape[1], dtype=counts.dtype)
+    cj = (counts * oh).sum(1)
+    sj = (sums * oh).sum(1)
+    ctr = (centers[None, :] * oh).sum(1)
+    mean = jnp.where(cj > 0, sj / jnp.maximum(cj, 1e-30), ctr)
+    t = jnp.where(found, mean, max_tpdt)
+    return jnp.where(total > 0, t, tpdt_init).astype(counts.dtype)
+
+
+def hist_update_ref(gaps, *, n_bins, bin_width, log_bins=False,
+                    log_min=1e-7, log_max=10.0):
+    """Batched histogram build.  gaps: (E,P) f32 (<=0 entries ignored).
+    Returns (counts (P,B), sums (P,B))."""
+    E, P = gaps.shape
+    valid = gaps > 0
+    if log_bins:
+        lo, hi = np.log(log_min), np.log(log_max)
+        x = (jnp.log(jnp.maximum(gaps, log_min)) - lo) / (hi - lo)
+        b = jnp.clip((x * n_bins).astype(jnp.int32), 0, n_bins - 1)
+    else:
+        b = jnp.clip((gaps / bin_width).astype(jnp.int32), 0, n_bins - 1)
+    oh = (b[..., None] == jnp.arange(n_bins)[None, None, :]) & valid[..., None]
+    counts = oh.sum(0).astype(jnp.float32)
+    sums = (oh * jnp.where(valid, gaps, 0.0)[..., None]).sum(0)
+    return counts, sums.astype(jnp.float32)
+
+
+def port_energy_ref(gaps, durs, tpdt, tail, *, t_w, t_s):
+    """Decoupled per-port EEE/PDT replay (fixed per-port t_PDT).
+
+    gaps/durs: (E,P) f32 — idle gap before each busy interval and its
+    duration (duration 0 = padding).  tpdt/tail: (P,).
+    Returns dict of (P,) arrays: time_wake, time_sleep, n_wake, hits, misses.
+    """
+    E, P = gaps.shape
+
+    def step(carry, ed):
+        wake, sleep, nw, hit, miss = carry
+        g, d = ed
+        act = d > 0
+        asleep = act & (g >= tpdt)
+        wake_add = jnp.where(asleep, tpdt + t_s + t_w + d, g + d)
+        sleep_add = jnp.where(asleep, jnp.maximum(g - tpdt - t_s, 0.0), 0.0)
+        return (wake + jnp.where(act, wake_add, 0.0),
+                sleep + jnp.where(act, sleep_add, 0.0),
+                nw + asleep.astype(jnp.float32),
+                hit + (act & ~asleep).astype(jnp.float32),
+                miss + asleep.astype(jnp.float32)), None
+
+    z = jnp.zeros((P,), jnp.float32)
+    (wake, sleep, nw, hit, miss), _ = jax.lax.scan(
+        step, (z, z, z, z, z), (gaps, durs))
+    # close-out tail
+    tail_sleeps = tail >= tpdt + t_s
+    wake = wake + jnp.where(tail_sleeps, tpdt + t_s, tail)
+    sleep = sleep + jnp.where(tail_sleeps, tail - tpdt - t_s, 0.0)
+    return {"time_wake": wake, "time_sleep": sleep, "n_wake": nw,
+            "hits": hit, "misses": miss}
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """Oracle for the flash-attention kernel: direct softmax attention with
+    GQA head grouping, causal and sliding-window masks.  f32 math."""
+    import math
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= q_pos - k_pos < window
+    s = jnp.where(ok, s, -0.7 * jnp.finfo(jnp.float32).max)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def ssd_ref(xs, dt, Bc, Cc, A, D, *, chunk=128):
+    """Oracle for the Mamba2 SSD kernel: direct (quadratic) evaluation.
+
+    xs: (B,S,H,P) f32; dt: (B,S,H); Bc/Cc: (B,S,N); A/D: (H,).
+    Returns (y (B,S,H,P) f32, h (B,H,N,P) f32)."""
+    B, S, H, P = xs.shape
+    xs32 = xs.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    dA = dt32 * A[None, None, :]                    # (B,S,H)
+    L = jnp.cumsum(dA, axis=1)
+    GB = jnp.einsum("btn,bsn->bts", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))         # (B,T,S)
+    decay = jnp.exp(L[:, :, None, :] - L[:, None, :, :])   # (B,T,S,H)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    M = GB[..., None] * decay * dt32[:, None, :, :]
+    M = jnp.where(causal[None, :, :, None], M, 0.0)
+    y = jnp.einsum("btsh,bshp->bthp", M, xs32)
+    y = y + xs32 * D[None, None, :, None]
+    # final state
+    w = jnp.exp(L[:, -1:, :] - L) * dt32            # (B,S,H)
+    h = jnp.einsum("bsh,bsn,bshp->bhnp", w, Bc.astype(jnp.float32), xs32)
+    return y, h

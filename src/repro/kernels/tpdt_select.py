@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: PerfBound t_PDT bin selection over all ports at once.
+
+Layout: ports tiled over the grid (TP rows/block), bins along lanes (B padded
+to a lane multiple).  The reverse cumulative sum is computed as a matmul with
+a lower-triangular ones matrix — MXU-friendly, no sequential scan — then the
+leftmost feasible bin is selected with a one-hot reduction.
+
+VMEM per block: counts/sums (TP x B f32) + the (B x B) triangular matrix:
+128*256*4 * 2 + 256*256*4 = 518 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+TILE_P = 128
+LANE = 128
+
+
+def _kernel(counts_ref, sums_ref, n_ref, total_ref, centers_ref, tpdt_ref, *,
+            n_bins, max_tpdt, tpdt_init):
+    c = counts_ref[...]                       # (TP, Bp)
+    s = sums_ref[...]
+    N = n_ref[...]                            # (TP,)
+    total = total_ref[...]
+    centers = centers_ref[...]                # (Bp,)
+    Bp = c.shape[-1]
+
+    # reverse cumsum via triangular matmul: rcum[:, j] = sum_{i>=j} c[:, i]
+    row = lax.broadcasted_iota(jnp.int32, (Bp, Bp), 0)
+    col = lax.broadcasted_iota(jnp.int32, (Bp, Bp), 1)
+    tri = (row >= col).astype(jnp.float32)
+    rcum = jnp.dot(c, tri, preferred_element_type=jnp.float32)
+
+    lane = lax.broadcasted_iota(jnp.int32, (1, Bp), 1)
+    feas = (rcum <= N[:, None]) & (lane < n_bins)
+    found = feas.any(axis=1)
+    j = jnp.argmax(feas, axis=1)
+    oh = (lane == j[:, None]).astype(jnp.float32)
+    cj = (c * oh).sum(axis=1)
+    sj = (s * oh).sum(axis=1)
+    ctr = (centers[None, :] * oh).sum(axis=1)
+    mean = jnp.where(cj > 0, sj / jnp.maximum(cj, 1e-30), ctr)
+    t = jnp.where(found, mean, max_tpdt)
+    tpdt_ref[...] = jnp.where(total > 0, t, tpdt_init)
+
+
+def tpdt_select_pallas(counts, sums, N, total, centers, *, max_tpdt,
+                       tpdt_init, interpret=False):
+    P, B = counts.shape
+    Pp = pl.cdiv(P, TILE_P) * TILE_P
+    Bp = pl.cdiv(B, LANE) * LANE
+
+    def pad(x, shape):
+        return jnp.zeros(shape, x.dtype).at[tuple(slice(0, d)
+                                                  for d in x.shape)].set(x)
+
+    counts = pad(counts.astype(jnp.float32), (Pp, Bp))
+    sums = pad(sums.astype(jnp.float32), (Pp, Bp))
+    N = pad(N.astype(jnp.float32), (Pp,))
+    total = pad(total.astype(jnp.float32), (Pp,))
+    centers = pad(centers.astype(jnp.float32), (Bp,))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_bins=B, max_tpdt=float(max_tpdt),
+                          tpdt_init=float(tpdt_init)),
+        grid=(Pp // TILE_P,),
+        in_specs=[
+            pl.BlockSpec((TILE_P, Bp), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_P, Bp), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_P,), lambda i: (i,)),
+            pl.BlockSpec((TILE_P,), lambda i: (i,)),
+            pl.BlockSpec((Bp,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_P,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Pp,), jnp.float32),
+        interpret=interpret,
+    )(counts, sums, N, total, centers)
+    return out[:P]

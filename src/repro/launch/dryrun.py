@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init).  512 placeholder host devices back both production
+meshes: (data=16, model=16) single-pod and (pod=2, data=16, model=16)
+multi-pod.
+
+Per cell we record ``compiled.memory_analysis()`` (proves the cell fits),
+``compiled.cost_analysis()`` (FLOPs/bytes for the roofline), and the
+collective-op byte census parsed from the compiled HLO (for the collective
+roofline term).  Results land in experiments/dryrun/<cell>.json and are
+resumable — existing JSONs are skipped unless --force.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+import argparse        # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax             # noqa: E402
+
+from repro.analysis.hlo import collective_census, module_cost  # noqa: E402
+from repro.configs.base import (SHAPES, cell_is_runnable,  # noqa: E402
+                                get_config, list_archs)
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.launch.specs import build_cell                  # noqa: E402
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def cell_name(arch, shape, multi_pod):
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force=False, verbose=True, overrides=None, tag=""):
+    """``overrides``: ModelConfig fields to replace (perf experiments);
+    ``tag`` suffixes the JSON name so variants never clobber baselines."""
+    import dataclasses
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = cell_name(arch, shape_name, multi_pod) + (f"__{tag}" if tag else "")
+    path = out_dir / (name + ".json")
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_devices": 512 if multi_pod else 256,
+           "overrides": overrides or {}, "tag": tag}
+    ok, reason = cell_is_runnable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        path.write_text(json.dumps(rec, indent=1))
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, in_sh, out_sh, donate = build_cell(cfg, shape, mesh)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            if verbose:
+                print(mem)
+            mem_rec = {}
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    mem_rec[k] = int(v)
+
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
+            if verbose:
+                print({k: v for k, v in sorted(cost.items())
+                       if k in ("flops", "bytes accessed")})
+            cost_rec = {k: float(v) for k, v in cost.items()
+                        if isinstance(v, (int, float))}
+
+            hlo_text = compiled.as_text()
+            census = collective_census(hlo_text)
+            # trip-count-corrected FLOPs/HBM bytes (cost_analysis counts
+            # while bodies once — useless for scanned-layer models)
+            hcost = module_cost(hlo_text)
+    except Exception as e:  # record the failure — failures are bugs
+        rec.update(status="failed", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        path.write_text(json.dumps(rec, indent=1))
+        raise
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=mem_rec,
+        cost=cost_rec,
+        hlo_cost={"flops": hcost["flops"], "bytes": hcost["bytes"]},
+        collectives=census,
+        param_count=cfg.param_count(),
+        active_param_count=cfg.active_param_count(),
+        tokens=shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                     else 1),
+        seq_len=shape.seq_len,
+        global_batch=shape.global_batch,
+        kind=shape.kind,
+    )
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--tag", default="", help="variant suffix for the JSON")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="ModelConfig override, e.g. --set attn_impl=stub "
+                         "--set remat=False (perf experiments)")
+    args = ap.parse_args()
+    out = Path(args.out)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        overrides[k] = v
+
+    meshes = [False, True]
+    if args.multi_pod and not args.single_pod:
+        meshes = [True]
+    if args.single_pod and not args.multi_pod:
+        meshes = [False]
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    if not (args.all or args.arch or args.shape):
+        ap.error("pass --all or --arch/--shape")
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = cell_name(arch, shape, mp)
+                try:
+                    rec = run_cell(arch, shape, mp, out, force=args.force,
+                                   overrides=overrides or None,
+                                   tag=args.tag)
+                    status = rec["status"]
+                    extra = ""
+                    if status == "ok":
+                        tb = rec["memory"].get("temp_size_in_bytes", 0)
+                        extra = (f" compile={rec['compile_s']:.0f}s "
+                                 f"temp/dev={tb/2**30:.2f}GiB "
+                                 f"flops={rec['cost'].get('flops', 0):.3g}")
+                    print(f"[{status:7s}] {name}{extra}", flush=True)
+                except Exception as e:
+                    failures.append(name)
+                    print(f"[FAILED ] {name}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures: {failures}")
+        raise SystemExit(1)
+    print("\nall cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Power advisor: evaluate EEE link power-management policies for a
+compiled LLM training/serving job BEFORE running it on hardware.
+
+This is the framework's first-class integration of the paper's technique
+with the LLM substrate (DESIGN.md §2 Layer B): the multi-pod dry-run's
+compiled HLO gives the collective schedule (bytes, op mix, per-layer loop
+structure); this module maps that schedule onto the paper's 4160-node
+Megafly as a phase-structured trace and replays it under any Policy with
+the coupled simulator.
+
+Traffic attribution (architecture-true for this framework's sharding):
+  * all-gather / reduce-scatter / all-to-all / collective-permute traffic
+    comes from the model axis (TP/EP/SP) — emitted per layer inside each
+    16-node TP group (which sits inside one Megafly group: TP rides the
+    cheap local links, as the paper's own LLM motivation suggests);
+  * all-reduce traffic is the data-parallel gradient reduction — emitted
+    once per step across TP-rank-aligned nodes in different groups.
+
+Compute time per step = HLO_FLOPs / (devices x peak x MFU), so the trace's
+compute:communicate duty cycle matches the compiled job.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.eee import Policy, PowerModel
+from repro.core.simulator import compare_policies
+from repro.topology.megafly import Megafly, paper_topology
+from repro.traffic import collectives as C
+from repro.traffic.trace import Trace
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 / chip
+
+
+def load_cell(arch: str, shape: str, mesh: str = "16x16",
+              dryrun_dir=DRYRUN_DIR) -> dict:
+    pod = "pod2" if mesh.startswith("2x") else "pod1"
+    path = Path(dryrun_dir) / f"{arch}__{shape}__{pod}.json"
+    rec = json.loads(path.read_text())
+    if rec.get("status") != "ok":
+        raise ValueError(f"cell {path.name} is {rec.get('status')}: "
+                         f"{rec.get('reason', rec.get('error'))}")
+    return rec
+
+
+def _tp_dp_split(census: dict):
+    """(tp_bytes, dp_bytes) logical bytes per device per step.
+
+    Prefers the census's replica-group axis classification (contiguous
+    groups = model axis = TP/EP/SP; strided = data/pod = DP); falls back
+    to op-kind (all-reduce = DP) for censuses recorded without it."""
+    axis = census.get("per_axis")
+    if axis:
+        tp = axis.get("tp", 0.0) + axis.get("local", 0.0)
+        dp = axis.get("dp", 0.0)
+        return tp, dp
+    per_op = census.get("per_op", {})
+    dp = per_op.get("all-reduce", 0.0)
+    tp = sum(v for k, v in per_op.items() if k != "all-reduce")
+    return tp, dp
+
+
+def llm_trace_from_cell(rec: dict, topo: Megafly, *, n_steps: int = 3,
+                        tp_degree: int = 16, mfu: float = 0.4,
+                        node_offset: int = 0) -> Trace:
+    """Build a Megafly trace replaying ``n_steps`` of the compiled job."""
+    n_dev = rec["n_devices"]
+    assert node_offset + n_dev <= topo.n_nodes
+    nodes = np.arange(node_offset, node_offset + n_dev, dtype=np.int64)
+    census = rec["collectives"]
+    layers = max(list(census.get("while_trip_counts", {}).values()) or [1])
+    tp_bytes, dp_bytes = _tp_dp_split(census)
+    flops = rec["cost"].get("flops", 0.0)
+    step_secs = flops / (PEAK_FLOPS * mfu) if flops else 1e-3
+
+    tp_groups = [nodes[i:i + tp_degree]
+                 for i in range(0, n_dev, tp_degree)]
+    dp_groups = [nodes[r::tp_degree] for r in range(tp_degree)]
+    per_layer = max(int(tp_bytes / max(layers, 1)), 1)
+
+    t = Trace(nodes=nodes, name=f"llm/{rec['arch']}/{rec['shape']}")
+    for _ in range(n_steps):
+        comp = step_secs / max(layers, 1)
+        for _l in range(layers):
+            t.compute(comp)
+            if tp_bytes > 0:
+                rounds = []
+                for g in tp_groups:
+                    rounds_g = C.allreduce(g, per_layer)
+                    rounds = rounds_g if not rounds else [
+                        np.concatenate([a, b]) for a, b in
+                        zip(rounds, rounds_g)]
+                t.rounds(rounds)
+        if dp_bytes > 0 and len(dp_groups[0]) >= 2:
+            rounds = []
+            for g in dp_groups:
+                rounds_g = C.allreduce(g, max(int(dp_bytes), 1))
+                rounds = rounds_g if not rounds else [
+                    np.concatenate([a, b]) for a, b in
+                    zip(rounds, rounds_g)]
+            t.rounds(rounds, barrier_last=True)
+        else:
+            t.barrier()
+    return t
+
+
+DEFAULT_POLICIES = {
+    "fixed_fw_100us": Policy(kind="fixed", t_pdt=100e-6,
+                             sleep_state="fast_wake"),
+    "fixed_ds_100us": Policy(kind="fixed", t_pdt=100e-6,
+                             sleep_state="deep_sleep"),
+    "perfbound_1pct": Policy(kind="perfbound", bound=0.01,
+                             sleep_state="deep_sleep"),
+    "pbc_1pct": Policy(kind="perfbound_correct", bound=0.01,
+                       sleep_state="deep_sleep"),
+    "pbc_1pct_fw": Policy(kind="perfbound_correct", bound=0.01,
+                          sleep_state="fast_wake"),
+}
+
+
+def advise(arch: str, shape: str, mesh: str = "16x16", *,
+           policies: dict | None = None, n_steps: int = 3,
+           mfu: float = 0.4, max_overhead_pct: float = 1.0,
+           topo: Megafly | None = None, pm: PowerModel | None = None,
+           dryrun_dir=DRYRUN_DIR) -> dict:
+    """Evaluate policies for a dry-run cell.  Returns
+    {'cell', 'table', 'recommended'} — recommended = most total energy
+    saved subject to exec overhead <= max_overhead_pct."""
+    rec = load_cell(arch, shape, mesh, dryrun_dir)
+    topo = topo or paper_topology()
+    trace = llm_trace_from_cell(rec, topo, n_steps=n_steps, mfu=mfu)
+    table = compare_policies(trace, topo, policies or DEFAULT_POLICIES, pm)
+    best, best_saved = None, -np.inf
+    for name, row in table.items():
+        if name == "baseline":
+            continue
+        if row["exec_overhead_pct"] <= max_overhead_pct \
+                and row["energy_saved_pct"] > best_saved:
+            best, best_saved = name, row["energy_saved_pct"]
+    return {
+        "cell": {k: rec[k] for k in ("arch", "shape", "mesh", "n_devices")},
+        "tp_dp_bytes": _tp_dp_split(rec["collectives"]),
+        "table": table,
+        "recommended": best,
+    }
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--max-overhead-pct", type=float, default=1.0)
+    args = ap.parse_args()
+    out = advise(args.arch, args.shape, args.mesh, n_steps=args.steps,
+                 max_overhead_pct=args.max_overhead_pct)
+    print(f"cell: {out['cell']}")
+    tp, dp = out["tp_dp_bytes"]
+    print(f"wire bytes/device/step: TP={tp/2**20:.1f} MiB "
+          f"DP={dp/2**20:.1f} MiB")
+    for name, row in out["table"].items():
+        print(f"  {name:18s} exec_oh={row['exec_overhead_pct']:7.3f}% "
+              f"saved={row['energy_saved_pct']:6.2f}% "
+              f"link_saved={row['link_energy_saved_pct']:6.2f}%")
+    print(f"recommended: {out['recommended']}")
+
+
+if __name__ == "__main__":
+    main()

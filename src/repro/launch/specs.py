@@ -1,0 +1,98 @@
+"""Abstract input specs (ShapeDtypeStruct) + shardings for every cell kind.
+
+``input_specs`` mirrors the real data pipeline / serving request batch
+shape-for-shape, dtype-for-dtype, with zero device allocation — the dry-run
+contract.  Modality frontends are stubs: the VLM cell receives precomputed
+patch embeddings, the audio cell precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed import sharding as sh
+from repro.models import model as M
+from repro.serving.serve import make_prefill_step, make_serve_step
+from repro.training.loop import abstract_train_state, make_train_step
+
+# 30 s of audio = 1500 post-conv frames, padded to the 16-way model axis
+# (jit input shardings require even tiling; the stub frontend zero-pads the
+# trailing 4 frames, masked in a real deployment by the frontend's mask).
+WHISPER_CROSS_LEN = 1504
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, with_labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if with_labels:
+        batch["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = _sds((B, cfg.num_patches, cfg.d_model),
+                                     cfg.dtype)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, S, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def serve_param_specs(cfg: ModelConfig):
+    """Inference weights: bf16 copies of the float params."""
+    p = jax.eval_shape(partial(M.init_params, cfg), jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda l: _sds(l.shape, jnp.bfloat16
+                       if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype),
+        p)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, B, S, enc_len=WHISPER_CROSS_LEN,
+                             dtype=jnp.bfloat16))
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Returns (fn, args, in_shardings, out_shardings, donate) for lowering."""
+    B = shape.global_batch
+    if shape.kind == "train":
+        state = abstract_train_state(cfg)
+        batch = batch_specs(cfg, shape, with_labels=True)
+        pspecs = sh.param_shardings(state["params"], mesh)
+        state_sh = {"params": pspecs,
+                    "opt": {"m": pspecs, "v": pspecs,
+                            "step": sh.replicated(mesh)}}
+        batch_sh = sh.batch_shardings(batch, mesh, B)
+        fn = make_train_step(cfg)
+        metrics_sh = jax.tree.map(
+            lambda _: sh.replicated(mesh),
+            {"loss": 0, "grad_norm": 0, "ce": 0, "aux": 0})
+        return (fn, (state, batch), (state_sh, batch_sh),
+                (state_sh, metrics_sh), (0,))
+
+    params = serve_param_specs(cfg)
+    pshard = sh.param_shardings(params, mesh)
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape, with_labels=False)
+        batch_sh = sh.batch_shardings(batch, mesh, B)
+        fn = make_prefill_step(cfg)
+        cache = cache_specs(cfg, shape)
+        out_sh = (sh.batch_shardings(_sds((B,), jnp.int32), mesh, B),
+                  sh.cache_shardings(cache, mesh, B))
+        return fn, (params, batch), (pshard, batch_sh), out_sh, ()
+
+    # decode: one new token with a KV cache holding seq_len-1 prior tokens
+    cache = cache_specs(cfg, shape)
+    cache_sh = sh.cache_shardings(cache, mesh, B)
+    tokens = _sds((B, 1), jnp.int32)
+    tok_sh = sh.batch_shardings(tokens, mesh, B)
+    fn = make_serve_step(cfg)
+    return (fn, (params, cache, tokens), (pshard, cache_sh, tok_sh),
+            (tok_sh, cache_sh), (1,))

@@ -1,0 +1,132 @@
+"""Training launcher: config -> mesh -> sharded train loop with
+checkpoint/restart, async saves, straggler monitoring, and optional
+cross-pod gradient compression.
+
+On a real TPU fleet this process runs once per host (jax.distributed
+initializes from the cluster env) and the mesh spans all pods; on CPU (CI,
+this container) it runs the same code on a (n_devices, 1) local mesh with
+the arch's reduced ``--smoke`` config — the e2e example and tests drive it
+that way.
+
+XLA flags for TPU runs (latency-hiding scheduler overlaps the per-layer
+TP collectives with compute — see EXPERIMENTS.md §Perf):
+  --xla_tpu_enable_latency_hiding_scheduler=true
+  --xla_tpu_enable_async_collective_fusion=true
+are exported via REPRO_XLA_EXTRA so the dry-run can A/B them.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import get_config
+from repro.data.pipeline import make_pipeline
+from repro.distributed import sharding as sh
+from repro.distributed.fault import StragglerMonitor
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.training.loop import init_train_state, make_train_step
+from repro.training.optimizer import AdamWConfig
+
+TPU_XLA_FLAGS = ("--xla_tpu_enable_latency_hiding_scheduler=true "
+                 "--xla_tpu_enable_async_collective_fusion=true")
+
+
+def build(cfg, mesh, *, lr, grad_accum, seed=0):
+    """Returns (state, step_fn, state_shardings)."""
+    with mesh:
+        state = init_train_state(cfg, jax.random.PRNGKey(seed))
+    pspecs = sh.param_shardings(state["params"], mesh)
+    state_sh = {"params": pspecs,
+                "opt": {"m": pspecs, "v": pspecs,
+                        "step": sh.replicated(mesh)}}
+    step_fn = jax.jit(
+        make_train_step(cfg, AdamWConfig(lr=lr), grad_accum=grad_accum),
+        in_shardings=(state_sh, None), out_shardings=(state_sh, None),
+        donate_argnums=(0,))
+    state = jax.device_put(state, state_sh)
+    return state, step_fn, state_sh
+
+
+def train(cfg, *, steps, seq_len, global_batch, lr=3e-4, grad_accum=1,
+          ckpt_dir=None, save_every=50, resume=False, log_every=10,
+          mesh=None, log=print):
+    mesh = mesh or make_local_mesh()
+    state, step_fn, state_sh = build(cfg, mesh, lr=lr,
+                                     grad_accum=grad_accum)
+    mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+    start = 0
+    if mgr and resume and mgr.latest_step() is not None:
+        state, start, _ = mgr.restore(state, shardings=state_sh)
+        log(f"resumed from step {start}")
+
+    monitor = StragglerMonitor(jax.process_count() or 1)
+    it = make_pipeline(cfg, seq_len, global_batch, start_step=start,
+                       shard=jax.process_index(),
+                       num_shards=max(jax.process_count(), 1))
+    losses = []
+    t_step = time.perf_counter()
+    with mesh:
+        for step, batch in it:
+            if step >= steps:
+                break
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.perf_counter() - t_step
+            t_step = time.perf_counter()
+            monitor.observe(step, {jax.process_index(): dt})
+            if step % log_every == 0:
+                log(f"step {step:5d} loss {loss:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} "
+                    f"{dt*1e3:.0f} ms")
+            if mgr and (step + 1) % save_every == 0:
+                mgr.save_async(state, step + 1)
+    if hasattr(it, "close"):
+        it.close()
+    if mgr:
+        mgr.wait()
+        mgr.save(state, min(steps, step + 1))
+    return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser(description="repro train launcher")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the arch's reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the (data=16, model=16) mesh (TPU pod)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_local_mesh())
+    t0 = time.time()
+    _, losses = train(cfg, steps=args.steps, seq_len=args.seq_len,
+                      global_batch=args.global_batch, lr=args.lr,
+                      grad_accum=args.grad_accum, ckpt_dir=args.ckpt_dir,
+                      save_every=args.save_every, resume=args.resume,
+                      mesh=mesh)
+    print(f"done: {len(losses)} steps in {time.time()-t0:.1f}s; "
+          f"loss {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,723 @@
+"""Model building blocks, pure-JAX, shard-friendly.
+
+Conventions
+-----------
+* All activations are ``(B, S, ...)``; weights live in plain dict pytrees.
+* Compute dtype is ``cfg.dtype`` (bf16 on TPU); softmax/normalization in f32.
+* Attention uses a direct path for short sequences and a chunked
+  (online-softmax, Rabe–Staats/flash-style) path for long ones, so the dry-run
+  never materializes an ``S x S`` score matrix at 32k/500k.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.ctx import constrain
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, p, kind):
+    if kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def norm_params(d, kind):
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim, theta):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+_NEG = -0.7 * jnp.finfo(jnp.float32).max
+
+
+def _mask_bias(q_pos, k_pos, *, causal, window):
+    """(…, Sq, Sk) additive f32 bias from position grids."""
+    ok = jnp.ones(jnp.broadcast_shapes(q_pos[..., :, None].shape,
+                                       k_pos[..., None, :].shape), bool)
+    if causal:
+        ok &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= q_pos[..., :, None] - k_pos[..., None, :] < window
+    return jnp.where(ok, 0.0, _NEG).astype(jnp.float32)
+
+
+def _direct_attention(q, k, v, q_pos, k_pos, *, causal, window, scale):
+    """q: (B,Sq,H,dh), k/v: (B,Sk,Hkv,dh). GQA by head grouping."""
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window)[:, None, None]
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v, preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, *, causal, window, scale,
+                       chunk_q, chunk_kv):
+    """Flash-style attention: scan over KV chunks with online softmax, mapped
+    over query chunks.  Memory is O(chunk_q * chunk_kv), never S^2."""
+    B, Sq, H, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    cq = min(chunk_q, Sq)
+    ckv = min(chunk_kv, Sk)
+    # pad to multiples
+    nq = -(-Sq // cq)
+    nk = -(-Sk // ckv)
+    pad_q, pad_k = nq * cq - Sq, nk * ckv - Sk
+    q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    # padded keys get position INT_MAX so causal mask kills them; also window
+    k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=2**30)
+
+    qc = q.reshape(B, nq, cq, H, dh).transpose(1, 0, 2, 3, 4)      # (nq,B,cq,H,dh)
+    qp = q_pos.reshape(B, nq, cq).transpose(1, 0, 2)               # (nq,B,cq)
+    kc = k.reshape(B, nk, ckv, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ckv, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(B, nk, ckv).transpose(1, 0, 2)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def per_q_chunk(args):
+        # rematerialized in backward: avoids retaining every (q,kv) tile's
+        # softmax residuals across the whole sequence (flash-style memory)
+        qi, qpi = args                                              # (B,cq,H,dh)
+        qg = qi.reshape(B, cq, Hkv, G, dh)
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            kj, vj, kpj = kv
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kj,
+                           preferred_element_type=jnp.float32) * scale
+            ok = jnp.ones((B, 1, 1, cq, ckv), bool)
+            if causal:
+                ok &= kpj[:, None, None, None, :] <= qpi[:, None, None, :, None]
+            else:
+                ok &= kpj[:, None, None, None, :] < 2**30
+            if window is not None:
+                ok &= (qpi[:, None, None, :, None] -
+                       kpj[:, None, None, None, :]) < window
+            s = jnp.where(ok, s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None]) * ok
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, dh), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kc, vc, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, cq, H, dh).astype(q.dtype)
+
+    out = lax.map(per_q_chunk, (qc, qp))                            # (nq,B,cq,H,dh)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * cq, H, dh)
+    return out[:, :Sq]
+
+
+def attention_op(q, k, v, q_pos, k_pos, *, causal, window, cfg):
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq > 1 and cfg.attn_impl != "jax":
+        # fresh-sequence fast paths (train / from-scratch prefill only:
+        # q_pos/k_pos are plain aranges there, which these paths assume)
+        if cfg.attn_impl == "pallas":
+            from repro.kernels.ops import flash_attention_op
+            return flash_attention_op(q, k, v, causal=causal, window=window,
+                                      block_q=cfg.attn_chunk_q,
+                                      block_kv=cfg.attn_chunk_kv)
+        if cfg.attn_impl == "stub":
+            # the Pallas kernel's HBM contract: read q/k/v once, write o
+            # once, nothing else materialized — used by the dry-run to
+            # measure the kernel-backed memory roofline term
+            G = q.shape[2] // k.shape[2]
+            kv = (k.sum(1, keepdims=True) + v.sum(1, keepdims=True))
+            return q + 1e-6 * jnp.repeat(kv, G, axis=2).astype(q.dtype)
+    if max(Sq, Sk) <= cfg.attn_direct_max_seq or Sq == 1:
+        return _direct_attention(q, k, v, q_pos, k_pos, causal=causal,
+                                 window=window, scale=scale)
+    return _chunked_attention(q, k, v, q_pos, k_pos, causal=causal,
+                              window=window, scale=scale,
+                              chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+
+
+def attn_params(key, cfg, d_model=None, cross=False):
+    d = d_model or cfg.d_model
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(k1, (d, H * dh), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, Hkv * dh), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, Hkv * dh), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (H * dh, d), jnp.float32) / math.sqrt(H * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), jnp.float32)
+        p["k_norm"] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def attention_block(x, p, cfg, *, positions, causal, window, kv=None,
+                    precomputed_kv=None, cache=None, cache_len=None,
+                    cache_kind="linear"):
+    """Self- or cross-attention.
+
+    x: (B,S,D). kv: source for cross-attention (already normed encoder out).
+    precomputed_kv: (k, v) already projected to (B,Sk,Hkv,dh) — cached
+    cross-attention at decode time.
+    cache: optional dict {'k','v'} with write pos ``cache_len`` (int32 scalar).
+      * ``linear``: cache is (B, Smax, Hkv, dh), written at cache_len.
+      * ``shift``: cache is (B, W, Hkv, dh) holding the last W tokens
+        right-aligned (sliding-window layers; O(W) memory at any context).
+    Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    is_cross = kv is not None or precomputed_kv is not None
+    q = x @ p["wq"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, S, H, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+
+    if precomputed_kv is not None:
+        k, v = precomputed_kv
+        k, v = k.astype(x.dtype), v.astype(x.dtype)
+    else:
+        src = kv if kv is not None else x
+        k = src @ p["wk"].astype(x.dtype)
+        v = src @ p["wv"].astype(x.dtype)
+        if cfg.qkv_bias:
+            k = k + p["bk"].astype(x.dtype)
+            v = v + p["bv"].astype(x.dtype)
+        k = k.reshape(B, src.shape[1], Hkv, dh)
+        v = v.reshape(B, src.shape[1], Hkv, dh)
+        if cfg.qk_norm:
+            k = rmsnorm(k, p["k_norm"])
+    if cfg.rope and not is_cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    q_pos = positions if positions.ndim == 2 else jnp.broadcast_to(
+        positions[None], (B, S))
+
+    new_cache = None
+    if cache is not None and not is_cross:
+        cdt = cache["k"].dtype
+        if cache_kind == "linear":
+            Smax = cache["k"].shape[1]
+            # index dtypes must match even under x64 (tests enable it)
+            z = jnp.zeros((), jnp.int32)
+            at = (z, jnp.asarray(cache_len, jnp.int32), z, z)
+            ck = lax.dynamic_update_slice(cache["k"], k.astype(cdt), at)
+            cv = lax.dynamic_update_slice(cache["v"], v.astype(cdt), at)
+            k_pos = jnp.broadcast_to(jnp.arange(Smax)[None], (B, Smax))
+            # entries beyond the filled region masked via causal (pos 2**30)
+            k_pos = jnp.where(k_pos < cache_len + S, k_pos, 2**30)
+        else:  # shift (sliding window): keep last W tokens right-aligned
+            W = cache["k"].shape[1]
+            if S >= W:
+                ck, cv = k[:, -W:].astype(cdt), v[:, -W:].astype(cdt)
+            else:
+                ck = jnp.concatenate([cache["k"][:, S:], k.astype(cdt)], axis=1)
+                cv = jnp.concatenate([cache["v"][:, S:], v.astype(cdt)], axis=1)
+            end = cache_len + S  # total tokens seen after this call
+            if S > 1:
+                # prefill: early queries need keys older than the retained
+                # window, so attend over the full fresh sequence (requires a
+                # fresh cache, cache_len == 0) and store only the last W.
+                new_cache = {"k": ck, "v": cv}
+                k_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+                o = attention_op(q, k, v, q_pos, k_pos, causal=causal,
+                                 window=window, cfg=cfg)
+                out = o.reshape(B, S, H * dh) @ p["wo"].astype(x.dtype)
+                return out, new_cache
+            k_pos = end - W + jnp.arange(W)[None]
+            k_pos = jnp.where(k_pos >= 0, k_pos, 2**30)
+            k_pos = jnp.broadcast_to(k_pos, (B, W))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+    else:
+        Sk = k.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+
+    o = attention_op(q, k, v, q_pos, k_pos,
+                     causal=causal and not is_cross, window=window, cfg=cfg)
+    out = o.reshape(B, S, H * dh) @ p["wo"].astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    f = cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s1, s2 = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {"w1": jax.random.normal(ks[0], (d, f), jnp.float32) * s1,
+         "w2": jax.random.normal(ks[1], (f, d), jnp.float32) * s2}
+    if cfg.act == "swiglu":
+        p["w3"] = jax.random.normal(ks[2], (d, f), jnp.float32) * s1
+    return p
+
+
+def mlp_block(x, p, cfg):
+    h = x @ p["w1"].astype(x.dtype)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"].astype(x.dtype))
+    elif cfg.act == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (capacity-based scatter dispatch, EP-shardable)
+# ---------------------------------------------------------------------------
+
+
+def moe_params(key, cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    s1, s2 = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * s1,
+        "we1": jax.random.normal(ks[1], (E, d, f), jnp.float32) * s1,
+        "we3": jax.random.normal(ks[2], (E, d, f), jnp.float32) * s1,
+        "we2": jax.random.normal(ks[3], (E, f, d), jnp.float32) * s2,
+    }
+
+
+def moe_block(x, p, cfg):
+    """Top-k routed MoE with fixed expert capacity.
+
+    ``moe_dispatch='global'``: tokens scatter into ONE ``(E, C, D)`` buffer
+    sharded over experts only — simple, but every device computes the FULL
+    global capacity (DP-redundant expert GEMMs).
+
+    ``moe_dispatch='dp'``: two-level (hierarchical) dispatch — tokens are
+    grouped by their data-parallel shard, positions/capacity are computed
+    PER GROUP (no cross-shard cumsum), and the buffer is ``(Gdp, E, Cl, D)``
+    sharded (data, model): expert GEMM FLOPs scale with DP and only the
+    per-group expert gather crosses the model axis (the all-to-all).
+    Returns (out, aux_loss).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = lax.top_k(probs, K)                       # (T,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32),
+                       axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * mean_prob)
+
+    # token groups: the DP degree when dispatch is hierarchical, else 1
+    Gdp = 1
+    if cfg.moe_dispatch == "dp":
+        from repro.distributed.ctx import _axis_size, _mesh, batch_axes
+        mesh = _mesh()
+        ax = batch_axes(mesh) if mesh else None
+        if ax is not None:
+            g = _axis_size(mesh, ax)
+            if B % g == 0:
+                Gdp = g
+    Tl = T // Gdp
+    C = max(1, int(math.ceil(Tl * K / E * cfg.moe_capacity_factor)))
+
+    idx_g = idx.reshape(Gdp, Tl, K)
+    onehot = jax.nn.one_hot(idx_g, E, dtype=jnp.int32)    # (G,Tl,K,E)
+    # position of each (token, k) within its group-local expert queue
+    pos_all = jnp.cumsum(onehot.reshape(Gdp, Tl * K, E), axis=1) - 1
+    pos = jnp.take_along_axis(pos_all.reshape(Gdp, Tl, K, E),
+                              idx_g[..., None], axis=-1)[..., 0]  # (G,Tl,K)
+    keep = pos < C
+    pos_c = jnp.minimum(pos, C - 1)
+
+    xg = xt.reshape(Gdp, Tl, D)
+    upd = jnp.where(keep[..., None], xg[:, :, None, :], 0) \
+        .reshape(Gdp, Tl * K, D)
+    e_ix = idx_g.reshape(Gdp, Tl * K)
+    s_ix = pos_c.reshape(Gdp, Tl * K)
+
+    # vmapped per-group scatter: G becomes a scatter BATCH dim, so GSPMD
+    # keeps the scatter local to each data shard (no cross-shard cumsum,
+    # no replication)
+    def scatter_group(u, e, s):
+        return jnp.zeros((E, C, D), x.dtype).at[e, s].add(u, mode="drop")
+
+    buf = jax.vmap(scatter_group)(upd, e_ix, s_ix)        # (G,E,C,D)
+    buf = constrain(buf, "B", None, None, None)           # dispatch local
+    # experts to model shards — THE MoE all-to-all (G stays on data)
+    buf = constrain(buf, "B", "M", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["we1"].astype(x.dtype))
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", buf,
+                                    p["we3"].astype(x.dtype))
+    y = jnp.einsum("gecf,efd->gecd", h, p["we2"].astype(x.dtype))
+    y = constrain(y, "B", "M", None, None)
+    y = constrain(y, "B", None, None, None)               # return a2a
+
+    out_k = jax.vmap(lambda yy, e, s: yy[e, s])(y, e_ix, s_ix)
+    out_k = out_k.reshape(Gdp, Tl, K, D)
+    out_k = jnp.where(keep[..., None], out_k, 0)
+    out = jnp.sum(out_k * gate.reshape(Gdp, Tl, K)[..., None]
+                  .astype(x.dtype), axis=2)
+    return out.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, chunked)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_params(key, cfg):
+    d, di, N, H, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_conv_width)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    conv_dim = di + 2 * N
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * N + H),
+                                     jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[1], (W, conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2, jnp.float32))),
+        "ssm_norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[3], (di, d), jnp.float32)
+        / math.sqrt(di),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B,S,C); w: (W,C) depthwise.  state: (B,W-1,C) carried for decode."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        new_state = xp[:, -(W - 1):] if W > 1 else None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(W - 1):] if W > 1 else None
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    return out + b.astype(x.dtype), new_state
+
+
+def mamba2_block(x, p, cfg, *, conv_state=None, ssm_state=None):
+    """Chunked SSD forward.  Returns (y, (conv_state, ssm_state))."""
+    B, S, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                       # (H,)
+    dA = dt * A                                                    # log-decay
+    Bc32, Cc32, xs32 = (Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+                        xs.astype(jnp.float32))
+
+    if cfg.ssm_impl == "stub":
+        # the SSD kernel's HBM contract: read xs/B/C/dt once, write y and
+        # the final state once — chunk decay tensors stay in VMEM
+        extra = (Bc32.sum(-1) + Cc32.sum(-1))[..., None, None] \
+            + dt[..., None]
+        y = xs32 * p["D"][None, None, :, None] + 1e-6 * extra
+        y = y.reshape(B, S, di).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        y = rmsnorm(y, p["ssm_norm"])
+        hT = jnp.zeros((B, H, N, P), jnp.float32) + 1e-6 * dA.sum()
+        return y @ p["out_proj"].astype(x.dtype), (new_conv, hT)
+
+    if cfg.ssm_impl == "pallas" and ssm_state is None and S > 1:
+        # VMEM-tiled SSD kernel (fresh sequence; decode stays recurrent)
+        from repro.kernels.ops import ssd_op_vjp
+        y32, hT = ssd_op_vjp(xs32, dt, Bc32, Cc32, A, p["D"],
+                             chunk=cfg.ssm_chunk)
+        y = y32.reshape(B, S, di).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        y = rmsnorm(y, p["ssm_norm"])
+        return y @ p["out_proj"].astype(x.dtype), (new_conv, hT)
+
+    Q = min(cfg.ssm_chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp = jnp.pad(Bc32, ((0, 0), (0, pad), (0, 0)))
+        Cp = jnp.pad(Cc32, ((0, 0), (0, pad), (0, 0)))
+        xp = jnp.pad(xs32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        dtp, Bp, Cp, xp = dt, Bc32, Cc32, xs32
+    dA = dA.reshape(B, nc, Q, H)
+    dtc = dtp.reshape(B, nc, Q, H)
+    Bch = Bp.reshape(B, nc, Q, N)
+    Cch = Cp.reshape(B, nc, Q, N)
+    xch = xp.reshape(B, nc, Q, H, P)
+
+    L = jnp.cumsum(dA, axis=2)                                     # (B,nc,Q,H)
+    # intra-chunk: M[t,s] = C_t·B_s * exp(L_t - L_s) * dt_s  (causal incl diag)
+    GB = jnp.einsum("bcqn,bcsn->bcqs", Cch, Bch)
+    decay = jnp.exp(L[:, :, :, None, :] - L[:, :, None, :, :])     # (B,nc,Q,Q,H)
+    causal_m = jnp.tril(jnp.ones((Q, Q), bool))
+    M = GB[..., None] * decay * dtc[:, :, None, :, :]
+    M = jnp.where(causal_m[None, None, :, :, None], M, 0.0)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", M, xch)
+
+    # chunk summaries: contribution of chunk to state at its end
+    end_decay = jnp.exp(L[:, :, -1:, :] - L)                       # (B,nc,Q,H)
+    Sc = jnp.einsum("bcqh,bcqn,bcqhp->bchnp",
+                    end_decay * dtc, Bch, xch)                      # (B,nc,H,N,P)
+
+    Ldec = jnp.exp(L)                                              # (B,nc,Q,H)
+
+    def chunk_step(h, inp):
+        Sc_c, Ldec_c, C_c = inp
+        y_int = jnp.einsum("bqn,bqh,bhnp->bqhp", C_c, Ldec_c, h)
+        h_new = h * Ldec_c[:, -1][:, :, None, None] + Sc_c
+        return h_new, y_int
+
+    h0 = (ssm_state.astype(jnp.float32) if ssm_state is not None
+          else jnp.zeros((B, H, N, P), jnp.float32))
+    hT, y_inter = lax.scan(
+        chunk_step, h0,
+        (Sc.transpose(1, 0, 2, 3, 4), Ldec.transpose(1, 0, 2, 3),
+         Cch.transpose(1, 0, 2, 3)))
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)                     # (B,nc,Q,H,P)
+
+    y = (y_intra + y_inter).reshape(B, nc * Q, H, P)[:, :S]
+    y = y + xs32 * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["ssm_norm"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, (new_conv, hT.astype(jnp.float32))
+
+
+def mamba2_decode_step(x, p, cfg, conv_state, ssm_state):
+    """Single-token recurrent update.  x: (B,1,D)."""
+    return mamba2_block(x, p, cfg, conv_state=conv_state, ssm_state=ssm_state)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent decay linear attention, chunked
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_params(key, cfg):
+    d, dh, H = cfg.d_model, cfg.rwkv_head_dim, cfg.rwkv_heads
+    r = 64  # decay LoRA rank
+    ks = jax.random.split(key, 10)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "w_r": jax.random.normal(ks[0], (d, d), jnp.float32) * s,
+        "w_k": jax.random.normal(ks[1], (d, d), jnp.float32) * s,
+        "w_v": jax.random.normal(ks[2], (d, d), jnp.float32) * s,
+        "w_g": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+        "w_o": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        "w0": jnp.full((d,), -6.0, jnp.float32),     # decay bias (log-log space)
+        "wa": jax.random.normal(ks[5], (d, r), jnp.float32) * s,
+        "wb": jax.random.normal(ks[6], (r, d), jnp.float32) / math.sqrt(r),
+        "u": jnp.zeros((d,), jnp.float32),           # per-channel bonus
+        "ln_x": jnp.zeros((dh,), jnp.float32),       # per-head groupnorm scale
+    }
+
+
+def _token_shift(x, shift_state):
+    """Returns (prev_token_seq, new_shift_state). x: (B,S,D)."""
+    if shift_state is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([shift_state[:, None].astype(x.dtype),
+                                x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def rwkv6_timemix(x, p, cfg, *, wkv_state=None, shift_state=None):
+    """Chunked WKV.  Returns (out, (wkv_state, shift_state))."""
+    B, S, D = x.shape
+    H, dh = cfg.rwkv_heads, cfg.rwkv_head_dim
+    prev, new_shift = _token_shift(x, shift_state)
+
+    def lerp(mu):
+        return x + (prev - x) * mu.astype(x.dtype)
+
+    r = (lerp(p["mu_r"]) @ p["w_r"].astype(x.dtype)).reshape(B, S, H, dh)
+    k = (lerp(p["mu_k"]) @ p["w_k"].astype(x.dtype)).reshape(B, S, H, dh)
+    v = (lerp(p["mu_v"]) @ p["w_v"].astype(x.dtype)).reshape(B, S, H, dh)
+    g = jax.nn.silu(lerp(p["mu_g"]) @ p["w_g"].astype(x.dtype))
+    xw = lerp(p["mu_w"]).astype(jnp.float32)
+    lw = -jnp.exp(p["w0"] + jnp.tanh(xw @ p["wa"]) @ p["wb"])      # log decay <0
+    lw = lw.reshape(B, S, H, dh)
+    u = p["u"].reshape(H, dh)
+
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+
+    if cfg.ssm_impl == "stub":
+        # the WKV kernel's HBM contract: read r/k/v/decay once, write y +
+        # final state once — chunk score tiles stay in VMEM
+        y = v32 + 1e-6 * (r32 + k32 + lw)
+        y = rmsnorm(y.reshape(B, S, H, dh), p["ln_x"])
+        y = y.reshape(B, S, D).astype(x.dtype) * g
+        ST = jnp.zeros((B, H, dh, dh), jnp.float32) + 1e-6 * u.sum()
+        return y @ p["w_o"].astype(x.dtype), (ST, new_shift)
+
+    Q = min(cfg.ssm_chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        r32 = jnp.pad(r32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k32 = jnp.pad(k32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v32 = jnp.pad(v32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    rc = r32.reshape(B, nc, Q, H, dh)
+    kc = k32.reshape(B, nc, Q, H, dh)
+    vc = v32.reshape(B, nc, Q, H, dh)
+    lwc = lw.reshape(B, nc, Q, H, dh)
+    cum = jnp.cumsum(lwc, axis=2)                                  # (B,nc,Q,H,dh)
+
+    # intra-chunk: out_t += sum_{s<t} ((r_t*exp(cum_t - cum_s)) . k_s) v_s
+    #              + ((r_t*u) . k_t) v_t
+    ri = rc * jnp.exp(cum)
+    ki = kc * jnp.exp(-cum)
+    att = jnp.einsum("bcqhd,bcshd->bchqs", ri, ki)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    diag = jnp.einsum("bcqhd,hd,bcqhd->bchq", rc, u, kc)
+    y = jnp.einsum("bchqs,bcshd->bcqhd", att, vc)
+    y = y + diag[..., None].transpose(0, 1, 3, 2, 4) * vc
+
+    # inter-chunk
+    end = cum[:, :, -1:]                                           # (B,nc,1,H,dh)
+    k_end = kc * jnp.exp(end - cum)                                # decay to end
+    Sc = jnp.einsum("bcqhd,bcqhe->bchde", k_end, vc)               # (B,nc,H,dh,dh)
+
+    def chunk_step(Sstate, inp):
+        Sc_c, ri_c, end_c = inp
+        y_int = jnp.einsum("bqhd,bhde->bqhe", ri_c, Sstate)
+        S_new = Sstate * jnp.exp(end_c[:, 0])[..., None] + Sc_c
+        return S_new, y_int
+
+    S0 = (wkv_state.astype(jnp.float32) if wkv_state is not None
+          else jnp.zeros((B, H, dh, dh), jnp.float32))
+    ST, y_inter = lax.scan(
+        chunk_step, S0,
+        (Sc.transpose(1, 0, 2, 3, 4), ri.transpose(1, 0, 2, 3, 4),
+         end.transpose(1, 0, 2, 3, 4)))
+    y = y + y_inter.transpose(1, 0, 2, 3, 4)
+    y = y.reshape(B, nc * Q, H, dh)[:, :S]
+
+    y = rmsnorm(y, p["ln_x"])                                      # per-head norm
+    y = y.reshape(B, S, D).astype(x.dtype) * g
+    out = y @ p["w_o"].astype(x.dtype)
+    return out, (ST.astype(jnp.float32), new_shift)
+
+
+def rwkv6_channelmix_params(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "w_k": jax.random.normal(ks[0], (d, f), jnp.float32) / math.sqrt(d),
+        "w_v": jax.random.normal(ks[1], (f, d), jnp.float32) / math.sqrt(f),
+        "w_r": jax.random.normal(ks[2], (d, d), jnp.float32) / math.sqrt(d),
+    }
+
+
+def rwkv6_channelmix(x, p, *, shift_state=None):
+    prev, new_shift = _token_shift(x, shift_state)
+    xk = x + (prev - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (prev - x) * p["mu_r"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ p["w_r"].astype(x.dtype)) * (h @ p["w_v"].astype(x.dtype))
+    return out, new_shift

@@ -1,0 +1,569 @@
+"""Model assembly: init / forward / prefill / decode for every arch family.
+
+Families
+--------
+* ``dense`` / ``moe`` / ``vlm``: decoder-only transformer (GQA, optional
+  sliding-window:global mix, optional MoE MLPs, optional patch-embed prefix).
+* ``encdec``: whisper-style encoder-decoder (learned positions, layernorm).
+* ``hybrid``: Zamba2-style Mamba2 backbone + one shared attention block
+  applied every ``attn_every`` layers.
+* ``ssm``: RWKV6 (attention-free).
+
+All stacks scan over layers with stacked params so the lowered HLO stays
+small (one block body), which keeps 512-device dry-run compiles fast.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.distributed.ctx import constrain
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Layer pattern helpers (static numpy, safe at trace time)
+# ---------------------------------------------------------------------------
+
+
+def layer_is_global(cfg) -> np.ndarray:
+    """Per-layer flag: True => full (global) attention."""
+    n = cfg.num_layers
+    if cfg.sliding_window and cfg.global_layer_every:
+        i = np.arange(n)
+        return (i % cfg.global_layer_every) == (cfg.global_layer_every - 1)
+    return np.ones(n, bool)
+
+
+def hybrid_attn_sites(cfg):
+    """(use_attn flags, site index per layer, n_sites) for hybrid archs."""
+    i = np.arange(cfg.num_layers)
+    use = (i % cfg.attn_every) == 0
+    site = np.cumsum(use) - 1
+    return use, np.maximum(site, 0), int(use.sum())
+
+
+def _act_spec(cfg):
+    return {"seq": ("B", "S", None), "batch": ("B", None, None),
+            "dmodel": ("B", None, "M")}[cfg.act_shard]
+
+
+def _maybe_remat(fn, cfg, mode):
+    if not (cfg.remat and mode == "train") or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "save_coll":
+        # keep the post-collective block outputs (tagged with
+        # checkpoint_name below): the backward recompute stops at them,
+        # so the forward TP all-reduces are not replayed (§Perf lever)
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out", "moe_out", "mamba_out",
+            "rwkv_tm_out", "rwkv_cm_out")
+        return jax.checkpoint(fn, prevent_cse=False, policy=policy)
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def _ckpt_name(x, name):
+    from jax.ad_checkpoint import checkpoint_name
+    return checkpoint_name(x, name)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_params(key, cfg, cross=False):
+    ks = jax.random.split(key, 5)
+    p = {"ln1": L.norm_params(cfg.d_model, cfg.norm),
+         "attn": L.attn_params(ks[0], cfg),
+         "ln2": L.norm_params(cfg.d_model, cfg.norm)}
+    if cfg.num_experts:
+        p["moe"] = L.moe_params(ks[1], cfg)
+    else:
+        p["mlp"] = L.mlp_params(ks[1], cfg)
+    if cross:
+        p["ln_c"] = L.norm_params(cfg.d_model, cfg.norm)
+        p["cross"] = L.attn_params(ks[2], cfg, cross=True)
+    return p
+
+
+def _mamba_block_params(key, cfg):
+    return {"ln": L.norm_params(cfg.d_model, cfg.norm),
+            "mamba": L.mamba2_params(key, cfg)}
+
+
+def _rwkv_block_params(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.norm_params(cfg.d_model, cfg.norm),
+            "tm": L.rwkv6_params(k1, cfg),
+            "ln2": L.norm_params(cfg.d_model, cfg.norm),
+            "cm": L.rwkv6_channelmix_params(k2, cfg)}
+
+
+def init_params(cfg, key):
+    keys = jax.random.split(key, 8)
+    Vp, D = cfg.padded_vocab, cfg.d_model
+    params = {
+        "embed": jax.random.normal(keys[0], (Vp, D), jnp.float32) * 0.02,
+        "final_norm": L.norm_params(D, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[1], (D, Vp),
+                                              jnp.float32) * 0.02
+
+    lk = jax.random.split(keys[2], cfg.num_layers)
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["blocks"] = jax.vmap(lambda k: _attn_block_params(k, cfg))(lk)
+    elif cfg.family == "encdec":
+        params["blocks"] = jax.vmap(
+            lambda k: _attn_block_params(k, cfg, cross=True))(lk)
+        ek = jax.random.split(keys[3], cfg.num_encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _attn_block_params(k, cfg))(ek),
+            "final_norm": L.norm_params(D, cfg.norm),
+        }
+        params["pos_embed_dec"] = jax.random.normal(
+            keys[4], (cfg.max_positions, D), jnp.float32) * 0.02
+        params["pos_embed_enc"] = jax.random.normal(
+            keys[5], (cfg.max_positions, D), jnp.float32) * 0.02
+    elif cfg.family == "hybrid":
+        params["blocks"] = jax.vmap(lambda k: _mamba_block_params(k, cfg))(lk)
+        params["shared"] = _attn_block_params(keys[3], cfg)
+    elif cfg.family == "ssm":
+        params["blocks"] = jax.vmap(lambda k: _rwkv_block_params(k, cfg))(lk)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def count_params(cfg, active_only=False) -> int:
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    if active_only and cfg.num_experts:
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        total -= cfg.num_layers * (cfg.num_experts -
+                                   cfg.experts_per_token) * per_expert
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens, cfg):
+    return params["embed"].astype(cfg.dtype)[tokens]
+
+
+def logits_out(params, x, cfg):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return constrain(logits, "B", None, "M")
+
+
+# ---------------------------------------------------------------------------
+# Attention-family stacks (dense / moe / vlm / encdec-decoder)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_apply(x, bp, cfg, *, positions, window, causal,
+                      cache=None, cache_len=None, cache_kind="linear",
+                      cross_kv=None, cross_cached=None):
+    """One transformer block.  Returns (x, aux, new_cache)."""
+    h, new_cache = L.attention_block(
+        L.norm(x, bp["ln1"], cfg.norm), bp["attn"], cfg,
+        positions=positions, causal=causal, window=window,
+        cache=cache, cache_len=cache_len, cache_kind=cache_kind)
+    x = x + _ckpt_name(h, "attn_out")
+    if cross_kv is not None or cross_cached is not None:
+        h, _ = L.attention_block(
+            L.norm(x, bp["ln_c"], cfg.norm), bp["cross"], cfg,
+            positions=positions, causal=False, window=None,
+            kv=cross_kv, precomputed_kv=cross_cached)
+        x = x + _ckpt_name(h, "attn_out")
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.num_experts:
+        h, aux = L.moe_block(L.norm(x, bp["ln2"], cfg.norm), bp["moe"], cfg)
+        h = _ckpt_name(h, "moe_out")
+    else:
+        h = _ckpt_name(L.mlp_block(L.norm(x, bp["ln2"], cfg.norm),
+                                   bp["mlp"], cfg), "mlp_out")
+    return x + h, aux, new_cache
+
+
+def _stack_train(x, blocks, cfg, positions, *, causal=True, cross_kv=None):
+    """Scan over layers, no cache.  Returns (x, aux_sum)."""
+    flags = layer_is_global(cfg)
+    mixed = cfg.sliding_window > 0 and not flags.all()
+    win_arr = (jnp.where(jnp.asarray(flags), 2 ** 30, cfg.sliding_window)
+               if mixed else None)
+
+    def body(carry, xs):
+        x, aux = carry
+        if mixed:
+            bp, win = xs
+        else:
+            bp, win = xs, (cfg.sliding_window or None)
+        x, a, _ = _attn_block_apply(x, bp, cfg, positions=positions,
+                                    window=win, causal=causal,
+                                    cross_kv=cross_kv)
+        x = constrain(x, *_act_spec(cfg))
+        return (x, aux + a), None
+
+    body = _maybe_remat(body, cfg, "train")
+    xs = (blocks, win_arr) if mixed else blocks
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux
+
+
+def _stack_with_cache(x, blocks, cfg, positions, cache, *, cross_len=0):
+    """Scan over layers updating KV caches (prefill S>1 or decode S=1).
+
+    Uniform archs: caches move through scan as xs->ys.
+    Mixed local/global archs (gemma3): two cache stacks in carry with
+    dynamic per-slot updates.
+    Returns (x, aux, new_cache).
+    """
+    flags = layer_is_global(cfg)
+    mixed = cfg.sliding_window > 0 and not flags.all()
+    clen = cache["len"]
+    encdec = cfg.is_encdec
+
+    if not mixed:
+        def body(carry, xs):
+            x, aux = carry
+            if encdec:
+                bp, kc, vc, ck, cv = xs
+                cross_cached = (ck, cv)
+            else:
+                bp, kc, vc = xs
+                cross_cached = None
+            x, a, nc = _attn_block_apply(
+                x, bp, cfg, positions=positions,
+                window=(cfg.sliding_window or None), causal=True,
+                cache={"k": kc, "v": vc}, cache_len=clen,
+                cache_kind="linear", cross_cached=cross_cached)
+            x = constrain(x, *_act_spec(cfg))
+            return (x, aux + a), (nc["k"], nc["v"])
+
+        xs = ((blocks, cache["k"], cache["v"], cache["ck"], cache["cv"])
+              if encdec else (blocks, cache["k"], cache["v"]))
+        (x, aux), (nk, nv) = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+        new_cache = dict(cache, k=nk, v=nv, len=clen + x.shape[1])
+        return x, aux, new_cache
+
+    # --- mixed sliding/global (gemma3) ---
+    is_g = jnp.asarray(flags)
+    slot_l = jnp.asarray(np.cumsum(~flags) - 1).clip(0)
+    slot_g = jnp.asarray(np.cumsum(flags) - 1).clip(0)
+
+    def body(carry, xs):
+        x, aux, kl, vl, kg, vg = carry
+        bp, gflag, sl, sg = xs
+
+        def do_global(_):
+            c = {"k": kg[sg], "v": vg[sg]}
+            xo, a, nc = _attn_block_apply(x, bp, cfg, positions=positions,
+                                          window=None, causal=True, cache=c,
+                                          cache_len=clen, cache_kind="linear")
+            return (xo, a, kl, vl,
+                    kg.at[sg].set(nc["k"]), vg.at[sg].set(nc["v"]))
+
+        def do_local(_):
+            c = {"k": kl[sl], "v": vl[sl]}
+            xo, a, nc = _attn_block_apply(x, bp, cfg, positions=positions,
+                                          window=cfg.sliding_window,
+                                          causal=True, cache=c, cache_len=clen,
+                                          cache_kind="shift")
+            return (xo, a, kl.at[sl].set(nc["k"]), vl.at[sl].set(nc["v"]),
+                    kg, vg)
+
+        xo, a, kl, vl, kg, vg = lax.cond(gflag, do_global, do_local, None)
+        xo = constrain(xo, *_act_spec(cfg))
+        return (xo, aux + a, kl, vl, kg, vg), None
+
+    carry0 = (x, jnp.zeros((), jnp.float32),
+              cache["k_local"], cache["v_local"],
+              cache["k_global"], cache["v_global"])
+    (x, aux, kl, vl, kg, vg), _ = lax.scan(
+        body, carry0, (blocks, is_g, slot_l, slot_g))
+    new_cache = dict(cache, k_local=kl, v_local=vl, k_global=kg, v_global=vg,
+                     len=clen + x.shape[1])
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (Zamba2) and SSM (RWKV6) stacks
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_stack(x, params, cfg, positions, cache, mode):
+    """Mamba2 backbone + shared attention block.  cache=None in train mode."""
+    use, site, n_sites = hybrid_attn_sites(cfg)
+    blocks, shared = params["blocks"], params["shared"]
+    B, S, D = x.shape
+    W = cfg.ssm_conv_width
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    decode = cache is not None
+    if decode:
+        clen, conv_s, ssm_s = cache["len"], cache["conv"], cache["ssm"]
+        ka, va = cache["k"], cache["v"]
+    else:
+        clen = 0
+        conv_s = jnp.zeros((cfg.num_layers, B, W - 1, conv_dim), cfg.dtype)
+        ssm_s = jnp.zeros((cfg.num_layers, B, cfg.ssm_heads,
+                           cfg.ssm_state, cfg.ssm_head_dim), jnp.float32)
+        ka = va = None
+
+    def body(carry, xs):
+        x, ka, va = carry
+        bp, uflag, st, cs, hs = xs
+
+        def with_attn(x, ka, va):
+            if decode:
+                c = {"k": ka[st], "v": va[st]}
+                h, nc = L.attention_block(
+                    L.norm(x, shared["ln1"], cfg.norm), shared["attn"], cfg,
+                    positions=positions, causal=True, window=None,
+                    cache=c, cache_len=clen)
+                ka, va = ka.at[st].set(nc["k"]), va.at[st].set(nc["v"])
+            else:
+                h, _ = L.attention_block(
+                    L.norm(x, shared["ln1"], cfg.norm), shared["attn"], cfg,
+                    positions=positions, causal=True, window=None)
+            x = x + h
+            x = x + L.mlp_block(L.norm(x, shared["ln2"], cfg.norm),
+                                shared["mlp"], cfg)
+            return x, ka, va
+
+        def no_attn(x, ka, va):
+            return x, ka, va
+
+        if decode:
+            x, ka, va = lax.cond(uflag, with_attn, no_attn, x, ka, va)
+        else:
+            x = lax.cond(uflag, lambda x: with_attn(x, None, None)[0],
+                         lambda x: x, x)
+
+        y, (ncs, nhs) = L.mamba2_block(
+            L.norm(x, bp["ln"], cfg.norm), bp["mamba"], cfg,
+            conv_state=cs, ssm_state=hs)
+        y = _ckpt_name(y, "mamba_out")
+        return (constrain(x + y, *_act_spec(cfg)), ka, va), (ncs, nhs)
+
+    body = _maybe_remat(body, cfg, mode)
+    xs = (blocks, jnp.asarray(use), jnp.asarray(site), conv_s, ssm_s)
+    (x, ka, va), (ncs, nhs) = lax.scan(body, (x, ka, va), xs)
+    new_cache = None
+    if decode:
+        new_cache = dict(cache, k=ka, v=va, conv=ncs, ssm=nhs,
+                         len=clen + x.shape[1])
+    elif mode == "prefill":
+        new_cache = {"conv": ncs, "ssm": nhs, "len": x.shape[1]}
+    return x, new_cache
+
+
+def _ssm_stack(x, blocks, cfg, cache, mode):
+    B, S, D = x.shape
+    H, dh = cfg.rwkv_heads, cfg.rwkv_head_dim
+    if cache is not None:
+        wkv, sha, shf, clen = (cache["wkv"], cache["shift_a"],
+                               cache["shift_f"], cache["len"])
+    else:
+        wkv = jnp.zeros((cfg.num_layers, B, H, dh, dh), jnp.float32)
+        sha = jnp.zeros((cfg.num_layers, B, D), cfg.dtype)
+        shf = jnp.zeros((cfg.num_layers, B, D), cfg.dtype)
+        clen = 0
+
+    use_state = cache is not None
+
+    def body(carry, xs):
+        x = carry
+        bp, w0, sa0, sf0 = xs
+        h, (w1, sa1) = L.rwkv6_timemix(
+            L.norm(x, bp["ln1"], cfg.norm), bp["tm"], cfg,
+            wkv_state=w0 if use_state else None,
+            shift_state=sa0 if use_state else None)
+        x = x + _ckpt_name(h, "rwkv_tm_out")
+        h, sf1 = L.rwkv6_channelmix(
+            L.norm(x, bp["ln2"], cfg.norm), bp["cm"],
+            shift_state=sf0 if use_state else None)
+        return constrain(x + _ckpt_name(h, "rwkv_cm_out"),
+                         *_act_spec(cfg)), (w1, sa1, sf1)
+
+    body = _maybe_remat(body, cfg, mode)
+    x, (nw, nsa, nsf) = lax.scan(body, x, (blocks, wkv, sha, shf))
+    new_cache = None
+    if cache is not None or mode == "prefill":
+        new_cache = {"wkv": nw, "shift_a": nsa.astype(cfg.dtype),
+                     "shift_f": nsf.astype(cfg.dtype), "len": clen + S}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames, cfg):
+    """frames: (B, S_enc, D) stubbed post-conv features."""
+    B, S, D = frames.shape
+    x = frames.astype(cfg.dtype) + params["pos_embed_enc"][:S].astype(cfg.dtype)
+    pos = jnp.arange(S)
+    x, _ = _stack_train(x, params["encoder"]["blocks"], cfg, pos, causal=False)
+    return L.norm(x, params["encoder"]["final_norm"], cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Public API: forward / caches / decode
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch, cfg, mode="train"):
+    """batch: {'tokens': (B,S)[, 'patch_embeds': (B,P,D)][, 'frames': (B,Se,D)]}.
+
+    Returns {'logits', 'aux_loss'} and, when mode=='prefill', also 'cache'.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.family == "vlm":
+        P = cfg.num_patches
+        pe = batch["patch_embeds"].astype(cfg.dtype)
+        x = jnp.concatenate([pe, x[:, P:]], axis=1)
+    positions = jnp.arange(S)
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        if mode == "prefill":
+            cache = init_cache(cfg, B, S, dtype=cfg.dtype)
+            x, aux, cache = _stack_with_cache(x, params["blocks"], cfg,
+                                              positions, cache)
+        else:
+            x, aux = _stack_train(x, params["blocks"], cfg, positions)
+    elif cfg.family == "encdec":
+        x = x + params["pos_embed_dec"][:S].astype(cfg.dtype)
+        enc = encode(params, batch["frames"], cfg)
+        if mode == "prefill":
+            cache = init_cache(cfg, B, S, enc_len=enc.shape[1], dtype=cfg.dtype)
+            cache = fill_cross_cache(params, cache, enc, cfg)
+            x, aux, cache = _stack_with_cache(x, params["blocks"], cfg,
+                                              positions, cache)
+        else:
+            x, aux = _stack_train(x, params["blocks"], cfg, positions,
+                                  cross_kv=enc)
+    elif cfg.family == "hybrid":
+        if mode == "prefill":
+            cache = init_cache(cfg, B, S, dtype=cfg.dtype)
+            x, cache = _hybrid_stack(x, params, cfg, positions, cache, mode)
+        else:
+            x, _ = _hybrid_stack(x, params, cfg, positions, None, mode)
+    elif cfg.family == "ssm":
+        x, cache = _ssm_stack(x, params["blocks"], cfg,
+                              init_cache(cfg, B, S, dtype=cfg.dtype)
+                              if mode == "prefill" else None, mode)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm(x, params["final_norm"], cfg.norm)
+    logits = logits_out(params, x, cfg)
+    out = {"logits": logits, "aux_loss": aux}
+    if mode == "prefill":
+        out["cache"] = cache
+    return out
+
+
+def fill_cross_cache(params, cache, enc, cfg):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    H, dh = cfg.num_kv_heads, cfg.head_dim
+    B, Se, D = enc.shape
+
+    def per_layer(bp):
+        k = (enc @ bp["cross"]["wk"].astype(enc.dtype))
+        v = (enc @ bp["cross"]["wv"].astype(enc.dtype))
+        if cfg.qkv_bias:
+            k = k + bp["cross"]["bk"].astype(enc.dtype)
+            v = v + bp["cross"]["bv"].astype(enc.dtype)
+        return (k.reshape(B, Se, H, dh).astype(cache["ck"].dtype),
+                v.reshape(B, Se, H, dh).astype(cache["cv"].dtype))
+
+    ck, cv = jax.vmap(per_layer)(params["blocks"])
+    return dict(cache, ck=ck, cv=cv)
+
+
+def init_cache(cfg, batch, max_len, enc_len=1500, dtype=jnp.bfloat16):
+    """Cache pytree sized for ``max_len`` total positions."""
+    Lr, B = cfg.num_layers, batch
+    Hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    zero = jnp.zeros
+    if cfg.family in ("dense", "moe", "vlm"):
+        flags = layer_is_global(cfg)
+        mixed = cfg.sliding_window > 0 and not flags.all()
+        if mixed:
+            Ll, Lg = int((~flags).sum()), int(flags.sum())
+            W = cfg.sliding_window
+            return {"k_local": zero((Ll, B, W, Hkv, dh), dtype),
+                    "v_local": zero((Ll, B, W, Hkv, dh), dtype),
+                    "k_global": zero((Lg, B, max_len, Hkv, dh), dtype),
+                    "v_global": zero((Lg, B, max_len, Hkv, dh), dtype),
+                    "len": jnp.zeros((), jnp.int32)}
+        return {"k": zero((Lr, B, max_len, Hkv, dh), dtype),
+                "v": zero((Lr, B, max_len, Hkv, dh), dtype),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "encdec":
+        return {"k": zero((Lr, B, max_len, Hkv, dh), dtype),
+                "v": zero((Lr, B, max_len, Hkv, dh), dtype),
+                "ck": zero((Lr, B, enc_len, Hkv, dh), dtype),
+                "cv": zero((Lr, B, enc_len, Hkv, dh), dtype),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        _, _, n_sites = hybrid_attn_sites(cfg)
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        return {"conv": zero((Lr, B, cfg.ssm_conv_width - 1, conv_dim), dtype),
+                "ssm": zero((Lr, B, cfg.ssm_heads, cfg.ssm_state,
+                             cfg.ssm_head_dim), jnp.float32),
+                "k": zero((n_sites, B, max_len, Hkv, dh), dtype),
+                "v": zero((n_sites, B, max_len, Hkv, dh), dtype),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        H, dh = cfg.rwkv_heads, cfg.rwkv_head_dim
+        return {"wkv": zero((Lr, B, H, dh, dh), jnp.float32),
+                "shift_a": zero((Lr, B, cfg.d_model), dtype),
+                "shift_f": zero((Lr, B, cfg.d_model), dtype),
+                "len": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cache, tokens, cfg):
+    """One decode step.  tokens: (B,1).  Returns (logits (B,1,Vp), cache)."""
+    B = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg)
+    clen = cache["len"]
+    positions = jnp.broadcast_to(clen, (B, 1)).astype(jnp.int32)
+
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        if cfg.family == "encdec":
+            x = x + lax.dynamic_slice_in_dim(
+                params["pos_embed_dec"], clen, 1).astype(cfg.dtype)
+        x, aux, cache = _stack_with_cache(x, params["blocks"], cfg,
+                                          positions, cache)
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_stack(x, params, cfg, positions, cache, "decode")
+    elif cfg.family == "ssm":
+        x, cache = _ssm_stack(x, params["blocks"], cfg, cache, "decode")
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm(x, params["final_norm"], cfg.norm)
+    return logits_out(params, x, cfg), cache

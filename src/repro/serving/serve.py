@@ -1,0 +1,59 @@
+"""Serving: prefill + batched greedy decode with sharded KV caches."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        out = M.forward(params, batch, cfg, mode="prefill")
+        last = out["logits"][:, -1]
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), out["cache"]
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    """One decode step: (params, cache, tokens (B,1)) -> (next (B,1), cache)."""
+    def serve_step(params, cache, tokens):
+        logits, cache = M.decode_step(params, cache, tokens, cfg)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+    return serve_step
+
+
+def generate(params, cfg, prompt, steps, cache_len=None):
+    """Eager helper for examples/tests: prefill a prompt then greedy-decode.
+
+    prompt: (B, S) int32.  Returns (B, steps) generated tokens.
+    """
+    B, S = prompt.shape
+    max_len = S + steps
+    batch = {"tokens": prompt}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.zeros((B, cfg.num_patches, cfg.d_model),
+                                          cfg.dtype)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.zeros((B, S, cfg.d_model), cfg.dtype)
+    out = M.forward(params, batch, cfg, mode="prefill")
+    cache = out["cache"]
+    # grow linear caches to fit the generation
+    def grow(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name in ("k", "v", "k_global", "v_global"):
+            pad = [(0, 0)] * x.ndim
+            pad[2] = (0, steps)
+            return jnp.pad(x, pad)
+        return x
+    cache = jax.tree_util.tree_map_with_path(grow, cache)
+    tok = jnp.argmax(out["logits"][:, -1], axis=-1).astype(
+        prompt.dtype)[:, None]
+    outs = [tok]
+    step = jax.jit(make_serve_step(cfg))
+    for _ in range(steps - 1):
+        tok, cache = step(params, cache, tok)
+        tok = tok.astype(prompt.dtype)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,176 @@
+"""Three-level fat-tree (k-ary) topology + D-mod-k routing.
+
+The paper's §2.6: BXIv3 supports "Fat-trees and Megafly/Dragonfly+"; the
+evaluation uses Megafly, and this module provides the fat-tree alternative
+with the same ``routes()`` contract so every policy/benchmark runs on
+either (`benchmarks/bench_topology.py` compares them).
+
+Structure (k even, k-port switches):
+  * k pods; each pod has k/2 edge + k/2 aggregation switches;
+  * each edge switch hosts k/2 nodes -> n_nodes = k^3/4;
+  * (k/2)^2 core switches; aggregation switch a of every pod connects to
+    core switches [a*(k/2), (a+1)*(k/2)).
+
+Link classes (undirected), giving 3*k^3/4 links total:
+  node:  node n <-> its edge switch                      (k^3/4)
+  ea:    edge e of pod p <-> aggregation a of pod p      (k^3/4)
+  ac:    aggregation (p, a) <-> core c in a's range      (k^3/4)
+
+Routing is deterministic minimal D-mod-k (Zahavi): up-path choices are
+selected by destination id modulo the respective fan-out, so any
+destination's down-path is unique and contention-free for global
+collectives — exactly the property the paper's deterministic Megafly
+routing provides.  Hop counts: same edge 2, same pod 4, cross pod 6.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FatTree:
+    k: int = 8
+
+    def __post_init__(self):
+        assert self.k % 2 == 0, "fat-tree arity must be even"
+
+    # ---- derived sizes ---------------------------------------------------
+    @property
+    def half(self) -> int:
+        return self.k // 2
+
+    @property
+    def n_pods(self) -> int:
+        return self.k
+
+    @property
+    def nodes_per_edge(self) -> int:
+        return self.half
+
+    @property
+    def nodes_per_pod(self) -> int:
+        return self.half * self.half
+
+    @property
+    def n_nodes(self) -> int:
+        return self.k * self.nodes_per_pod
+
+    @property
+    def n_core(self) -> int:
+        return self.half * self.half
+
+    @property
+    def n_switches(self) -> int:
+        return self.k * self.k + self.n_core      # edge+agg per pod + core
+
+    @property
+    def n_node_links(self) -> int:
+        return self.n_nodes
+
+    @property
+    def n_ea_links(self) -> int:
+        return self.k * self.half * self.half
+
+    @property
+    def n_ac_links(self) -> int:
+        return self.k * self.half * self.half
+
+    @property
+    def n_links(self) -> int:
+        return self.n_node_links + self.n_ea_links + self.n_ac_links
+
+    @property
+    def n_ports(self) -> int:
+        return 2 * self.n_links
+
+    @property
+    def max_hops(self) -> int:
+        return 6
+
+    # ---- link ids ----------------------------------------------------------
+    def node_link(self, n):
+        return np.asarray(n)
+
+    def ea_link(self, pod, edge, agg):
+        h = self.half
+        return (self.n_node_links
+                + (np.asarray(pod) * h + np.asarray(edge)) * h
+                + np.asarray(agg))
+
+    def ac_link(self, pod, agg, core):
+        """core is a GLOBAL core id in agg's range [agg*h, (agg+1)*h)."""
+        h = self.half
+        slot = np.asarray(core) - np.asarray(agg) * h
+        return (self.n_node_links + self.n_ea_links
+                + (np.asarray(pod) * h + np.asarray(agg)) * h + slot)
+
+    # ---- coordinates ---------------------------------------------------------
+    def node_pod(self, n):
+        return np.asarray(n) // self.nodes_per_pod
+
+    def node_edge(self, n):
+        return (np.asarray(n) % self.nodes_per_pod) // self.nodes_per_edge
+
+    # ---- routing ---------------------------------------------------------------
+    def routes(self, src, dst):
+        """Deterministic minimal D-mod-k.  Same contract as Megafly.routes:
+        (links (M, max_hops) int32 -1-padded, dirs, n_hops)."""
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        M = src.shape[0]
+        h = self.half
+        links = np.full((M, self.max_hops), -1, np.int64)
+        dirs = np.zeros((M, self.max_hops), np.int64)
+
+        ps, pd = self.node_pod(src), self.node_pod(dst)
+        es, ed = self.node_edge(src), self.node_edge(dst)
+        same = src == dst
+        same_edge = (~same) & (ps == pd) & (es == ed)
+        intra = (~same) & (ps == pd) & (es != ed)
+        inter = ps != pd
+
+        nl_s, nl_d = self.node_link(src), self.node_link(dst)
+
+        links[same_edge, 0] = nl_s[same_edge]
+        links[same_edge, 1] = nl_d[same_edge]
+        dirs[same_edge, 1] = 1
+
+        # intra pod via aggregation dst % h (D-mod-k on the up choice)
+        agg = dst % h
+        up = self.ea_link(ps, es, agg)
+        dn = self.ea_link(pd, ed, agg)
+        for m, arr, d in ((0, nl_s, 0), (1, up, 0), (2, dn, 1), (3, nl_d, 1)):
+            links[intra, m] = arr[intra]
+            dirs[intra, m] = d
+
+        # inter pod: agg = dst % h; core slot = (dst // h) % h within agg's
+        # range — the D-mod-k pair makes the down-path unique per dst
+        agg_i = dst % h
+        core = agg_i * h + (dst // h) % h
+        up1 = self.ea_link(ps, es, agg_i)
+        up2 = self.ac_link(ps, agg_i, core)
+        dn2 = self.ac_link(pd, agg_i, core)
+        dn1 = self.ea_link(pd, ed, agg_i)
+        for m, arr, d in ((0, nl_s, 0), (1, up1, 0), (2, up2, 0),
+                          (3, dn2, 1), (4, dn1, 1), (5, nl_d, 1)):
+            links[inter, m] = arr[inter]
+            dirs[inter, m] = d
+
+        n_hops = np.where(same, 0,
+                          np.where(same_edge, 2, np.where(intra, 4, 6)))
+        return links.astype(np.int32), dirs.astype(np.int32), \
+            n_hops.astype(np.int32)
+
+    def hop_distance(self, src, dst):
+        return self.routes(np.atleast_1d(src), np.atleast_1d(dst))[2]
+
+
+def paper_equivalent_fattree() -> FatTree:
+    """k=26 fat-tree: 4394 nodes — the closest k-ary match to the paper's
+    4160-node Megafly for like-for-like energy comparisons."""
+    return FatTree(k=26)
+
+
+def small_fattree(k: int = 4) -> FatTree:
+    return FatTree(k=k)

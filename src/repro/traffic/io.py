@@ -1,0 +1,94 @@
+"""VEF-like trace file persistence.
+
+The paper's evaluation replays VEF-TraceLib traces captured from real MPI
+runs.  Those files are not redistributable, so `repro.traffic.generators`
+synthesizes equivalent structures — but a production deployment ingests
+captured traces.  This module defines a compact on-disk format with the
+same phase-structured semantics as ``repro.traffic.trace.Trace`` so real
+captures can be converted once and replayed forever:
+
+    <name>.npz
+      nodes            (N,)  int64    participating global node ids
+      step_kind        (S,)  uint8    0=compute 1=messages 2=barrier
+      comp_ptr         (S+1,) int64   CSR offsets into comp_node/secs
+      comp_node        (Kc,) int64
+      comp_secs        (Kc,) float64
+      msg_ptr          (S+1,) int64   CSR offsets into msgs
+      msgs             (Km,3) int64   [src, dst, bytes]
+      msg_barrier      (S,)  uint8    barrier flag on message steps
+
+Messages-with-barrier and standalone barriers both round-trip.  The
+format is numpy-portable (no pickle), versioned via an ``meta`` array.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.traffic.trace import Step, Trace
+
+FORMAT_VERSION = 1
+
+
+def save_trace(path, trace: Trace) -> None:
+    kinds, comp_ptr, comp_node, comp_secs = [], [0], [], []
+    msg_ptr, msgs, msg_barrier = [0], [], []
+    for s in trace.steps:
+        if s.compute_nodes is not None and len(s.compute_nodes):
+            kinds.append(0)
+            comp_node.append(np.asarray(s.compute_nodes, np.int64))
+            comp_secs.append(np.asarray(s.compute_secs, np.float64))
+            comp_ptr.append(comp_ptr[-1] + len(s.compute_nodes))
+            msg_ptr.append(msg_ptr[-1])
+            msg_barrier.append(0)
+        elif s.msgs is not None and len(s.msgs):
+            kinds.append(1)
+            msgs.append(np.asarray(s.msgs, np.int64).reshape(-1, 3))
+            msg_ptr.append(msg_ptr[-1] + len(s.msgs))
+            comp_ptr.append(comp_ptr[-1])
+            msg_barrier.append(1 if s.barrier else 0)
+        elif s.barrier:
+            kinds.append(2)
+            comp_ptr.append(comp_ptr[-1])
+            msg_ptr.append(msg_ptr[-1])
+            msg_barrier.append(1)
+        else:  # empty step: drop
+            continue
+    np.savez_compressed(
+        path,
+        meta=np.array([FORMAT_VERSION], np.int64),
+        name=np.array([trace.name]),
+        nodes=np.asarray(trace.nodes, np.int64),
+        step_kind=np.asarray(kinds, np.uint8),
+        comp_ptr=np.asarray(comp_ptr, np.int64),
+        comp_node=(np.concatenate(comp_node) if comp_node
+                   else np.zeros(0, np.int64)),
+        comp_secs=(np.concatenate(comp_secs) if comp_secs
+                   else np.zeros(0, np.float64)),
+        msg_ptr=np.asarray(msg_ptr, np.int64),
+        msgs=(np.concatenate(msgs) if msgs
+              else np.zeros((0, 3), np.int64)),
+        msg_barrier=np.asarray(msg_barrier, np.uint8),
+    )
+
+
+def load_trace(path) -> Trace:
+    z = np.load(path, allow_pickle=False)
+    version = int(z["meta"][0])
+    if version != FORMAT_VERSION:
+        raise ValueError(f"trace format v{version}, expected "
+                         f"v{FORMAT_VERSION}")
+    t = Trace(nodes=z["nodes"], name=str(z["name"][0]))
+    kinds = z["step_kind"]
+    cp, mp = z["comp_ptr"], z["msg_ptr"]
+    for i, kind in enumerate(kinds):
+        if kind == 0:
+            t.steps.append(Step(
+                compute_nodes=z["comp_node"][cp[i]:cp[i + 1]],
+                compute_secs=z["comp_secs"][cp[i]:cp[i + 1]]))
+        elif kind == 1:
+            t.steps.append(Step(
+                msgs=z["msgs"][mp[i]:mp[i + 1]],
+                barrier=bool(z["msg_barrier"][i])))
+        else:
+            t.steps.append(Step(barrier=True))
+    return t

@@ -1,0 +1,83 @@
+"""Train step + loss; builds the jitted, sharded step for any arch/shape."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def cross_entropy(logits, labels, vocab_size):
+    """logits: (B,S,Vp) any float dtype; labels: (B,S) int (-1 = ignore)."""
+    logits = logits.astype(jnp.float32)
+    mask = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def make_loss_fn(cfg):
+    def loss_fn(params, batch):
+        out = M.forward(params, batch, cfg, mode="train")
+        ce = cross_entropy(out["logits"], batch["labels"], cfg.vocab_size)
+        loss = ce + AUX_LOSS_WEIGHT * out["aux_loss"]
+        return loss, {"ce": ce, "aux": out["aux_loss"]}
+    return loss_fn
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig = AdamWConfig(),
+                    grad_accum: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {'params', 'opt'}.  With grad_accum > 1 the batch's leading dim
+    is split into microbatches scanned sequentially (activation memory /
+    accum lower, same math).
+    """
+    loss_fn = make_loss_fn(cfg)
+
+    def grads_of(params, batch):
+        (loss, met), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, met, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum > 1:
+            def micro(carry, mb):
+                acc, lsum = carry
+                loss, _, g = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, acc, g), lsum + loss), None
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            met = {}
+        else:
+            loss, met, grads = grads_of(params, batch)
+        new_params, new_opt, gnorm = adamw_update(opt_cfg, params, grads,
+                                                  state["opt"])
+        metrics = {"loss": loss, "grad_norm": gnorm, **met}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(cfg, key):
+    params = M.init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def abstract_train_state(cfg):
+    return jax.eval_shape(partial(init_train_state, cfg),
+                          jax.random.PRNGKey(0))

@@ -1,0 +1,166 @@
+"""Checkpointing, fault tolerance, straggler mitigation, elastic restore."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (CheckpointManager, latest_step,
+                                      restore_checkpoint, save_checkpoint)
+from repro.distributed.fault import (RecoveryStats, StragglerMonitor,
+                                     WorkerFailure, plan_elastic_mesh,
+                                     run_with_recovery)
+
+
+def _state(x=0.0):
+    return {"params": {"w": jnp.full((4, 4), x, jnp.float32),
+                       "b": jnp.arange(3, dtype=jnp.int32)},
+            "step": jnp.asarray(int(x), jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    st = _state(3.5)
+    save_checkpoint(tmp_path, st, 7, {"note": "hi"})
+    out, step, meta = restore_checkpoint(tmp_path, jax.eval_shape(lambda: st))
+    assert step == 7 and meta == {"note": "hi"}
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_and_explicit(tmp_path):
+    for s in (1, 5, 9):
+        save_checkpoint(tmp_path, _state(float(s)), s)
+    assert latest_step(tmp_path) == 9
+    out, step, _ = restore_checkpoint(tmp_path, _state())
+    assert step == 9 and float(out["params"]["w"][0, 0]) == 9.0
+    out, step, _ = restore_checkpoint(tmp_path, _state(), step=5)
+    assert step == 5 and float(out["params"]["w"][0, 0]) == 5.0
+
+
+def test_uncommitted_checkpoint_invisible(tmp_path):
+    save_checkpoint(tmp_path, _state(1.0), 1)
+    # fake a torn write: directory without COMMIT
+    d = tmp_path / "step_000000002"
+    d.mkdir()
+    (d / "MANIFEST.json").write_text("{}")
+    assert latest_step(tmp_path) == 1
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(tmp_path, _state(), 0)
+    bad = {"params": {"w": jnp.zeros((2, 2)), "b": jnp.zeros(3, jnp.int32)},
+           "step": jnp.zeros((), jnp.int32)}
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(tmp_path, bad)
+
+
+def test_manager_retention_and_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in range(5):
+        mgr.save_async(_state(float(s)), s)
+    mgr.wait()
+    mgr.save(_state(99.0), 99)  # sync save triggers gc too
+    steps = [int(p.name[5:]) for p in tmp_path.iterdir()
+             if p.name.startswith("step_")]
+    assert len(steps) == 2 and 99 in steps
+
+
+def test_elastic_restore_onto_local_mesh(tmp_path):
+    """Restore with explicit shardings — the elastic-restart path."""
+    from repro.launch.mesh import make_local_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    st = _state(2.0)
+    save_checkpoint(tmp_path, st, 3)
+    mesh = make_local_mesh()
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), st)
+    out, step, _ = restore_checkpoint(tmp_path, st, shardings=sh)
+    assert out["params"]["w"].sharding == sh["params"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# Straggler monitor
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_flagged_and_reassigned():
+    mon = StragglerMonitor(4, threshold=1.5, warmup=2, cooldown=5)
+    reps = []
+    for step in range(6):
+        times = {0: 1.0, 1: 1.0, 2: 1.0, 3: 4.0}
+        r = mon.observe(step, times)
+        if r:
+            reps.append(r)
+    assert reps and all(r.stragglers == [3] for r in reps)
+    actions = [r.reassignment for r in reps if r.reassignment]
+    assert actions and actions[0][0] == 3  # slowest swaps with a fast worker
+
+
+def test_straggler_cooldown_limits_actions():
+    mon = StragglerMonitor(2, threshold=1.2, warmup=1, cooldown=100)
+    acts = 0
+    for step in range(10):
+        rep = mon.observe(step, {0: 1.0, 1: 5.0})
+        if rep and rep.reassignment:
+            acts += 1
+    assert acts == 1
+
+
+def test_no_false_positives_when_uniform():
+    mon = StragglerMonitor(4, warmup=1)
+    for step in range(5):
+        assert mon.observe(step, {w: 1.0 for w in range(4)}) is None
+
+
+# ---------------------------------------------------------------------------
+# Elastic mesh planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_elastic_mesh():
+    assert plan_elastic_mesh(512, 16) == (32, 16)
+    assert plan_elastic_mesh(496, 16) == (31, 16)   # one node lost
+    assert plan_elastic_mesh(16, 16) == (1, 16)
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(8, 16)
+
+
+# ---------------------------------------------------------------------------
+# Recovery driver
+# ---------------------------------------------------------------------------
+
+
+def test_run_with_recovery_replays_from_checkpoint(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    log = []
+
+    def step_fn(state, step):
+        log.append(step)
+        return {"params": {"w": state["params"]["w"] + 1.0,
+                           "b": state["params"]["b"]},
+                "step": jnp.asarray(step + 1, jnp.int32)}
+
+    state, stats = run_with_recovery(
+        step_fn, _state(0.0), mgr, n_steps=25,
+        fail_at={7: 1, 18: 3}, save_every=5)
+    assert stats.failures == 2
+    assert stats.restores == 2
+    assert stats.wasted_steps == (7 - 5) + (18 - 15)
+    # final state reflects exactly 25 effective steps
+    assert float(state["params"]["w"][0, 0]) == 25.0
+    assert stats.steps_run == 25 + stats.wasted_steps
+
+
+def test_recovery_with_straggler_monitor(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mon = StragglerMonitor(4, threshold=1.5, warmup=1, cooldown=3)
+
+    def step_fn(state, step):
+        return state
+
+    def timings(step):
+        return {0: 1.0, 1: 1.0, 2: 1.0, 3: 3.0}
+
+    _, stats = run_with_recovery(step_fn, _state(), mgr, n_steps=10,
+                                 monitor=mon, timings_fn=timings)
+    assert stats.reassignments >= 2   # cooldown=3 over 10 steps

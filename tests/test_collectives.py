@@ -1,0 +1,107 @@
+"""MPI-collective expansion invariants: round structure, data conservation,
+and semantic reachability (broadcast reaches everyone, reduce drains to
+root, allreduce moves the bandwidth-optimal byte count)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.traffic import collectives as C
+
+NODES8 = np.arange(100, 108, dtype=np.int64)  # non-trivial global ids
+
+
+def _flatten(rounds):
+    return np.concatenate(rounds, axis=0)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32])
+def test_allreduce_round_and_byte_structure(n):
+    nodes = np.arange(n, dtype=np.int64)
+    nbytes = 1 << 20
+    rounds = C.allreduce(nodes, nbytes)
+    logn = n.bit_length() - 1
+    assert len(rounds) == 2 * logn                   # RS + AG
+    msgs = _flatten(rounds)
+    # recursive halving-doubling total traffic: 2 * (n-1)/n * nbytes per rank
+    per_rank = msgs[:, 2].sum() / n
+    np.testing.assert_allclose(per_rank, 2 * (n - 1) / n * nbytes, rtol=0.01)
+    # every round is a perfect matching (each rank sends and receives once)
+    for r in rounds:
+        assert sorted(r[:, 0].tolist()) == sorted(nodes.tolist())
+        assert sorted(r[:, 1].tolist()) == sorted(nodes.tolist())
+
+
+def test_broadcast_reaches_all():
+    for root in (0, 3):
+        rounds = C.broadcast(NODES8, 4096, root=root)
+        have = {NODES8[root]}
+        for r in rounds:
+            for s, d, b in r:
+                assert s in have, "sender must already hold the data"
+                have.add(d)
+        assert have == set(NODES8.tolist())
+    # binomial tree: log2(n) rounds, n-1 messages total
+    rounds = C.broadcast(NODES8, 4096)
+    assert len(rounds) == 3
+    assert sum(len(r) for r in rounds) == 7
+
+
+def test_reduce_drains_to_root():
+    for root in (0, 5):
+        rounds = C.reduce(NODES8, 4096, root=root)
+        alive = set(NODES8.tolist())
+        for r in rounds:
+            for s, d, b in r:
+                assert s in alive and d in alive
+                alive.discard(s)                     # sender's data merged
+        assert alive == {NODES8[root]}
+        assert sum(len(r) for r in rounds) == 7
+
+
+def test_gather_single_round_to_root():
+    rounds = C.gather(NODES8, 512, root=2)
+    assert len(rounds) == 1
+    assert (rounds[0][:, 1] == NODES8[2]).all()
+    assert len(rounds[0]) == 7
+
+
+def test_allgather_ring():
+    rounds = C.allgather(NODES8, 512)
+    assert len(rounds) == 7                          # n-1 rounds
+    for r in rounds:
+        np.testing.assert_array_equal(r[:, 1], np.roll(NODES8, -1))
+
+
+def test_alltoall_bruck_rounds():
+    rounds = C.alltoall(NODES8, 1 << 20)
+    assert len(rounds) == 3                          # log2(8)
+    for k, r in enumerate(rounds):
+        np.testing.assert_array_equal(r[:, 1], np.roll(NODES8, -(1 << k)))
+        assert (r[:, 2] == (1 << 20) // 2).all()
+
+
+def test_p2p_halo_symmetric_neighbors():
+    msgs = C.p2p_halo(NODES8, 256)[0]
+    pairs = {(int(s), int(d)) for s, d, _ in msgs}
+    assert all((d, s) in pairs for s, d in pairs)    # symmetric exchange
+    assert all(s != d for s, d in pairs)
+
+
+@pytest.mark.parametrize("fn", [C.allreduce, C.broadcast, C.reduce,
+                                C.alltoall])
+def test_power_of_two_required(fn):
+    with pytest.raises(AssertionError):
+        fn(np.arange(6), 1024)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([2, 4, 8, 16]), st.integers(1, 1 << 24))
+def test_collectives_use_only_participants(n, nbytes):
+    nodes = np.arange(1000, 1000 + n, dtype=np.int64)
+    allowed = set(nodes.tolist())
+    for fn in (C.allreduce, C.broadcast, C.reduce, C.alltoall, C.allgather):
+        for r in fn(nodes, nbytes):
+            assert set(r[:, 0].tolist()) <= allowed
+            assert set(r[:, 1].tolist()) <= allowed
+            assert (r[:, 2] >= 1).all()

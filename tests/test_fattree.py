@@ -1,0 +1,82 @@
+"""Fat-tree topology invariants + policy parity with Megafly."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core.eee import Policy
+from repro.core.simulator import compare_policies
+from repro.topology.fattree import FatTree, small_fattree
+from repro.traffic.generators import alexnet
+
+
+def test_counts_k4():
+    t = FatTree(k=4)
+    assert t.n_nodes == 16            # k^3/4
+    assert t.n_switches == 16 + 4     # 4 pods x (2+2) + 4 core
+    assert t.n_links == 3 * 16        # 3 * k^3/4
+    assert t.n_ports == 96
+
+
+def test_counts_paper_equivalent():
+    from repro.topology.fattree import paper_equivalent_fattree
+    t = paper_equivalent_fattree()
+    assert t.n_nodes == 26 ** 3 // 4  # 4394 ~ the paper's 4160
+    assert t.n_links == 3 * t.n_nodes
+
+
+def _route_ok(t, s, d):
+    links, dirs, nh = t.routes(np.array([s]), np.array([d]))
+    links, nh = links[0], int(nh[0])
+    if s == d:
+        assert nh == 0
+        return
+    used = links[:nh]
+    assert (used >= 0).all() and (used < t.n_links).all()
+    assert used[0] == s and used[-1] == d      # endpoint node links
+    assert len(set(used.tolist())) == nh       # minimal: no repeats
+    assert (links[nh:] == -1).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 53), st.integers(0, 53))
+def test_route_validity_property(s, d):
+    t = FatTree(k=6)
+    s, d = s % t.n_nodes, d % t.n_nodes
+    _route_ok(t, s, d)
+
+
+def test_hop_classes():
+    t = FatTree(k=4)
+    assert t.hop_distance(0, 1)[0] == 2        # same edge
+    assert t.hop_distance(0, 2)[0] == 4        # same pod, other edge
+    assert t.hop_distance(0, 4)[0] == 6        # other pod
+    assert t.hop_distance(3, 3)[0] == 0
+
+
+def test_dmodk_downpath_unique():
+    """Every source reaching destination d uses the SAME core link into
+    d's pod (contention-free down-paths, the D-mod-k property)."""
+    t = FatTree(k=4)
+    d = 9
+    dn_links = set()
+    for s in range(t.n_nodes):
+        if t.node_pod(s) == t.node_pod(d):
+            continue
+        links, _, nh = t.routes(np.array([s]), np.array([d]))
+        dn_links.add(int(links[0, 3]))         # core -> agg link at dst pod
+    assert len(dn_links) == 1
+
+
+def test_policies_run_on_fattree():
+    """The whole policy stack is topology-generic: a trace + PerfBound
+    runs unchanged on the fat-tree (same routes() contract)."""
+    t = small_fattree(k=4)
+    tr = alexnet(t, n_nodes=8, iters=2)
+    out = compare_policies(
+        tr, t, {"pbc": Policy(kind="perfbound_correct", bound=0.01,
+                              sleep_state="deep_sleep")})
+    row = out["pbc"]
+    assert row["link_energy_saved_pct"] > 0
+    assert np.isfinite(row["latency_overhead_pct"])
+    assert row["n_wake_transitions"] > 0

@@ -1,0 +1,81 @@
+"""Launcher-layer integration: train loop with resume, power advisor."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.power_advisor import (DEFAULT_POLICIES, advise,
+                                        llm_trace_from_cell)
+from repro.launch.train import train
+from repro.topology.megafly import small_topology
+
+CFG = get_config("qwen2-1.5b").smoke()
+
+
+def test_train_runs_and_checkpoints(tmp_path):
+    _, losses = train(CFG, steps=6, seq_len=16, global_batch=4,
+                      ckpt_dir=tmp_path, save_every=3, log_every=100,
+                      log=lambda *a: None)
+    assert len(losses) == 6
+    assert all(np.isfinite(l) for l in losses)
+    steps = sorted(int(p.name[5:]) for p in tmp_path.iterdir()
+                   if p.name.startswith("step_"))
+    assert steps and steps[-1] == 6
+
+
+def test_train_resume_reproduces_stream(tmp_path):
+    """Stop at step 4, resume to 8 == one uninterrupted 8-step run."""
+    _, l_a1 = train(CFG, steps=4, seq_len=16, global_batch=4,
+                    ckpt_dir=tmp_path, save_every=4, log_every=100,
+                    log=lambda *a: None)
+    _, l_a2 = train(CFG, steps=8, seq_len=16, global_batch=4,
+                    ckpt_dir=tmp_path, save_every=100, resume=True,
+                    log_every=100, log=lambda *a: None)
+    _, l_b = train(CFG, steps=8, seq_len=16, global_batch=4,
+                   log_every=100, log=lambda *a: None)
+    np.testing.assert_allclose(l_a1 + l_a2, l_b, rtol=1e-4)
+
+
+FAKE_CELL = {
+    "arch": "fake-1b", "shape": "train_4k", "mesh": "16x16",
+    "n_devices": 64, "status": "ok",
+    "cost": {"flops": 1e12},
+    "collectives": {
+        "per_op": {"all-reduce": 3e8, "all-gather": 1e8},
+        "per_axis": {"tp": 2.5e8, "dp": 1.5e8},
+        "while_trip_counts": {"body": 4},
+    },
+}
+
+
+def test_llm_trace_structure(topo):
+    tr = llm_trace_from_cell(FAKE_CELL, topo, n_steps=2, tp_degree=16)
+    assert len(tr.nodes) == 64
+    # per step: 4 layers x (compute + TP rounds) + DP rounds
+    msgs = tr.n_messages
+    assert msgs > 0
+    # TP allreduce within 16-node groups: 2*log2(16) rounds of 16 nodes x 4
+    # groups x 4 layers x 2 steps + DP rounds
+    assert tr.total_bytes > 0
+
+
+def test_advise_from_fake_dryrun(tmp_path, topo):
+    p = tmp_path / "fake-1b__train_4k__pod1.json"
+    p.write_text(json.dumps(FAKE_CELL))
+    out = advise("fake-1b", "train_4k", topo=topo, dryrun_dir=tmp_path,
+                 n_steps=1, max_overhead_pct=5.0)
+    assert out["recommended"] is not None
+    assert set(out["table"]) == {"baseline", *DEFAULT_POLICIES}
+    base = out["table"]["baseline"]
+    assert base["exec_overhead_pct"] == 0.0
+    tp, dp = out["tp_dp_bytes"]
+    assert tp == 2.5e8 and dp == 1.5e8
+
+
+def test_advise_rejects_failed_cell(tmp_path):
+    p = tmp_path / "bad__train_4k__pod1.json"
+    p.write_text(json.dumps({"status": "failed", "error": "x"}))
+    with pytest.raises(ValueError):
+        advise("bad", "train_4k", dryrun_dir=tmp_path)

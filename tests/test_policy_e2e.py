@@ -1,0 +1,141 @@
+"""End-to-end policy evaluation on reduced app traces: validates the
+paper's qualitative claims at small scale (the full-scale numbers live in
+benchmarks/ and EXPERIMENTS.md §Paper-validation)."""
+import numpy as np
+import pytest
+
+from repro.core.eee import Policy, PowerModel
+from repro.core.simulator import compare_policies, simulate_trace
+from repro.topology.megafly import small_topology
+from repro.traffic.generators import GENERATORS, small_apps
+
+
+@pytest.fixture(scope="module")
+def apps():
+    topo = small_topology()
+    return topo, small_apps(topo, n_nodes=8)
+
+
+def test_patmos_execution_time_immune(apps):
+    """§4.2: PATMOS touches the network only at start/end, so ANY policy
+    leaves execution time essentially unchanged."""
+    topo, a = apps
+    out = compare_policies(
+        a["patmos"], topo,
+        {"harsh": Policy(kind="fixed", t_pdt=0.0, sleep_state="deep_sleep")})
+    assert abs(out["harsh"]["exec_overhead_pct"]) < 0.1
+    # and the links sleep essentially the whole run
+    assert out["harsh"]["asleep_frac"] > 0.99
+    assert out["harsh"]["link_energy_saved_pct"] > 85.0
+
+
+def test_lammps_deep_sleep_worse_than_fast_wake_overhead(apps):
+    """§4.1.1 Fig 7a: with aggressive t_PDT, Deep Sleep's overhead exceeds
+    Fast Wake's (t_w is an order of magnitude larger)."""
+    topo, a = apps
+    out = compare_policies(
+        a["lammps"], topo,
+        {"fw": Policy(kind="fixed", t_pdt=0.0, sleep_state="fast_wake"),
+         "ds": Policy(kind="fixed", t_pdt=0.0, sleep_state="deep_sleep")})
+    assert out["ds"]["exec_overhead_pct"] > out["fw"]["exec_overhead_pct"]
+    assert out["ds"]["latency_overhead_pct"] > out["fw"]["latency_overhead_pct"]
+
+
+def test_large_tpdt_no_overhead_little_saving(apps):
+    """Fig 7: t_PDT = 1 s -> negligible overhead AND negligible link saving
+    on a ~2 s trace (the paper's 'barely energy savings' endpoint)."""
+    topo, a = apps
+    out = compare_policies(
+        a["lammps"], topo,
+        {"1s": Policy(kind="fixed", t_pdt=1.0, sleep_state="deep_sleep")})
+    assert abs(out["1s"]["exec_overhead_pct"]) < 0.5
+    assert out["1s"]["link_energy_saved_pct"] < 30.0
+
+
+def test_tpdt_sweep_tradeoff_curve(apps):
+    """Larger t_PDT monotonically reduces overhead while reducing savings
+    (coarse trend over decades, as in Fig 7/10/13/16)."""
+    topo, a = apps
+    pols = {f"t{i}": Policy(kind="fixed", t_pdt=t, sleep_state="deep_sleep")
+            for i, t in enumerate([0.0, 1e-4, 1e-2, 1.0])}
+    out = compare_policies(a["alexnet"], topo, pols)
+    oh = [out[f"t{i}"]["exec_overhead_pct"] for i in range(4)]
+    sv = [out[f"t{i}"]["link_energy_saved_pct"] for i in range(4)]
+    assert oh[0] >= oh[2] - 0.5 and oh[2] >= oh[3] - 0.5
+    assert sv[0] >= sv[2] >= sv[3]
+
+
+def test_perfbound_bounds_degradation(apps):
+    """PerfBound's whole point: overhead stays within ~the bound while still
+    saving energy (LAMMPS, 1 % and 5 % thresholds)."""
+    topo, a = apps
+    out = compare_policies(
+        a["lammps"], topo,
+        {"pb1": Policy(kind="perfbound", bound=0.01,
+                       sleep_state="fast_wake"),
+         "pb5": Policy(kind="perfbound", bound=0.05,
+                       sleep_state="fast_wake")})
+    for k in ("pb1", "pb5"):
+        assert out[k]["exec_overhead_pct"] < 10.0
+        assert out[k]["link_energy_saved_pct"] > 0.0
+
+
+def test_perfbound_correct_reduces_latency_overhead(apps):
+    """The paper's headline claim (§4.1.2, §4.2.2, Fig 8c/11a): PBC reduces
+    latency overhead vs plain PerfBound at equal threshold."""
+    topo, a = apps
+    for app in ("lammps", "alexnet"):
+        out = compare_policies(
+            a[app], topo,
+            {"pb": Policy(kind="perfbound", bound=0.01,
+                          sleep_state="deep_sleep"),
+             "pbc": Policy(kind="perfbound_correct", bound=0.01,
+                           sleep_state="deep_sleep")})
+        assert out["pbc"]["latency_overhead_pct"] \
+            <= out["pb"]["latency_overhead_pct"] + 1e-6, app
+        # energy sacrifice is minimal (within a few % of link energy)
+        assert out["pbc"]["link_energy_saved_pct"] \
+            >= out["pb"]["link_energy_saved_pct"] - 5.0, app
+
+
+def test_pbc_misses_fewer_than_pb(apps):
+    topo, a = apps
+    out = compare_policies(
+        a["mlwf"], topo,
+        {"pb": Policy(kind="perfbound", bound=0.01,
+                      sleep_state="deep_sleep"),
+         "pbc": Policy(kind="perfbound_correct", bound=0.01,
+                       sleep_state="deep_sleep")})
+    pb_miss = out["pb"]["misses"] / max(out["pb"]["hits"]
+                                        + out["pb"]["misses"], 1)
+    pbc_miss = out["pbc"]["misses"] / max(out["pbc"]["hits"]
+                                          + out["pbc"]["misses"], 1)
+    assert pbc_miss <= pb_miss + 1e-9
+
+
+def test_histogram_modes_all_run(apps):
+    topo, a = apps
+    pols = {m: Policy(kind="perfbound_correct", bound=0.02, hist_mode=m,
+                      sleep_state="fast_wake", hist_clear_n=50, ring_n=50)
+            for m in ("keep_all", "self_clear", "circular")}
+    out = compare_policies(a["alexnet"], topo, pols)
+    for m, row in out.items():
+        assert np.isfinite(row["total_energy"])
+        if m != "baseline":
+            assert row["n_wake_transitions"] > 0
+
+
+def test_generators_signatures(apps):
+    """Traffic signatures match the paper's descriptions: PATMOS is
+    endpoint-only; MLWF is near-continuous; AlexNet is periodic bursts."""
+    topo, a = apps
+    pat, mlwf = a["patmos"], a["mlwf"]
+    # PATMOS: almost all wall time is one compute phase
+    comp = sum(float(s.compute_secs.max()) for s in pat.steps
+               if s.compute_secs is not None)
+    assert comp >= 20.0
+    assert pat.n_messages < 200
+    # MLWF: many more message rounds per unit compute
+    assert mlwf.n_messages > pat.n_messages
+    # AlexNet gradient buckets: 8 layers x iters AllReduces
+    assert a["alexnet"].total_bytes > 100 << 20

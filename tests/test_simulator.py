@@ -1,0 +1,240 @@
+"""Coupled network power simulator: timing/energy semantics (paper §3/§4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import simulator as S
+from repro.core.eee import DEEP_SLEEP, FAST_WAKE, Policy, PowerModel
+from repro.traffic.generators import small_apps
+from repro.traffic.trace import Trace
+
+
+def _one_msg_net(topo, policy, pm, msgs_np, collect=False):
+    """Run a hand-built message list through sim_chunk."""
+    src, dst, nbytes, t_inj = msgs_np
+    links, dirs, nhops = topo.routes(np.asarray(src), np.asarray(dst))
+    msgs = S._pad_msgs(links, dirs, nhops,
+                       np.asarray(t_inj, np.float64),
+                       np.asarray(nbytes, np.float64))
+    net = S.init_net(topo.n_links, policy)
+    net, out = S.sim_chunk(net, msgs, policy, pm, topo.n_links, collect)
+    return net, out
+
+
+def test_latency_no_power_saving(topo, pm):
+    """Baseline cut-through latency: one serialization time + per-switch
+    cut-through latency for the intermediate hops."""
+    pol = Policy(kind="none")
+    nbytes = 1 << 20
+    net, (delivery, lat) = _one_msg_net(
+        topo, pol, pm, ([0], [topo.nodes_per_group + 1], [nbytes], [0.0]))
+    t_ser = nbytes / pm.link_bandwidth
+    want = t_ser + 4 * pm.switch_latency  # 5 hops (inter-group), cut-through
+    np.testing.assert_allclose(float(lat[0]), want, rtol=1e-9)
+
+
+def test_wake_penalty_applied_once_asleep(topo, pm):
+    """With t_PDT=0 every hop starts asleep: latency grows by ~hops*t_w."""
+    base = Policy(kind="none")
+    for state in ("fast_wake", "deep_sleep"):
+        pol = Policy(kind="fixed", t_pdt=0.0, sleep_state=state)
+        nbytes = 4096
+        args = ([0], [topo.nodes_per_group + 1], [nbytes], [1.0])
+        _, (_, lat0) = _one_msg_net(topo, base, pm, args)
+        _, (_, lat1) = _one_msg_net(topo, pol, pm, args)
+        st = pol.state
+        extra = float(lat1[0] - lat0[0])
+        want = 5 * (st.t_w + pol.sync_overhead)
+        np.testing.assert_allclose(extra, want, rtol=1e-9)
+
+
+def test_pdt_prevents_transition_within_window(topo, pm):
+    """A second packet inside t_PDT sees NO wake penalty; outside, it does."""
+    t_pdt = 1e-3
+    pol = Policy(kind="fixed", t_pdt=t_pdt, sleep_state="deep_sleep")
+    nbytes = 4096
+    t_ser = nbytes / pm.link_bandwidth
+    d = topo.nodes_per_group + 1
+
+    def lat_of(gap):
+        # first packet wakes the route; second injected ``gap`` later
+        _, (_, lat) = _one_msg_net(
+            topo, pol, pm, ([0, 0], [d, d], [nbytes, nbytes],
+                            [1.0, 1.0 + gap]))
+        return float(lat[1])
+
+    inside = lat_of(t_pdt * 0.5)
+    outside = lat_of(t_pdt * 400)     # way past expiry on every hop
+    base = t_ser + 4 * pm.switch_latency  # cut-through
+    np.testing.assert_allclose(inside, base, rtol=1e-9)
+    assert outside > base + 4 * DEEP_SLEEP.t_w
+
+
+def test_energy_conservation_per_link(topo, pm):
+    """After close_out every link's wake+sleep time equals the global
+    simulated span (each second at exactly one power level)."""
+    pol = Policy(kind="fixed", t_pdt=50e-6, sleep_state="deep_sleep")
+    rng = np.random.default_rng(0)
+    M = 64
+    src = rng.integers(0, topo.n_nodes, M)
+    dst = (src + 1 + rng.integers(0, topo.n_nodes - 1, M)) % topo.n_nodes
+    t_inj = np.sort(rng.uniform(0, 5e-3, M))
+    nbytes = rng.integers(256, 1 << 16, M)
+    links, dirs, nhops = topo.routes(src, dst)
+    msgs = S._pad_msgs(links, dirs, nhops, t_inj.astype(np.float64),
+                       nbytes.astype(np.float64))
+    net = S.init_net(topo.n_links, pol)
+    net, (delivery, lat) = S.sim_chunk(net, msgs, pol, pm, topo.n_links)
+    t_end = float(np.asarray(delivery).max()) + 1.0
+    tw, ts = S.close_out(net, t_end, pol, topo.n_links)
+    total = np.asarray(tw + ts)
+    t_end_eff = max(t_end, float(net["last_end"][:topo.n_links].max()))
+    # misses extend a link's local timeline by t_w (+ unfinished t_s): allow
+    # only overshoot, never undershoot, and bound it by n_wake*(t_w+t_s)
+    over = total - t_end_eff
+    assert (over > -1e-12).all()
+    bound = np.asarray(net["n_wake"][:topo.n_links]) * \
+        (pol.state.t_w + pol.sync_overhead + pol.state.t_s) + 1e-12
+    assert (over <= bound).all()
+
+
+def test_hits_plus_misses_equals_traversals(topo, pm):
+    pol = Policy(kind="fixed", t_pdt=10e-6, sleep_state="fast_wake")
+    rng = np.random.default_rng(1)
+    M = 32
+    src = rng.integers(0, topo.n_nodes, M)
+    dst = (src + 7) % topo.n_nodes
+    links, dirs, nhops = topo.routes(src, dst)
+    msgs = S._pad_msgs(links, dirs, nhops,
+                       np.sort(rng.uniform(0, 1e-3, M)).astype(np.float64),
+                       np.full(M, 4096.0))
+    net = S.init_net(topo.n_links, pol)
+    net, _ = S.sim_chunk(net, msgs, pol, pm, topo.n_links)
+    n = topo.n_links
+    assert int(net["n_hit"][:n].sum() + net["n_miss"][:n].sum()) \
+        == int(nhops.sum())
+    assert int(net["n_miss"][:n].sum()) == int(net["n_wake"][:n].sum())
+
+
+def test_deep_sleep_saves_more_than_fast_wake_when_idle(topo, pm):
+    """Long-idle trace: Deep Sleep (10 % power) beats Fast Wake (40 %)."""
+    nodes = np.arange(8, dtype=np.int64)
+    tr = Trace(nodes=nodes, name="idle")
+    tr.messages([[0, 1, 4096]])
+    tr.compute(2.0)                     # 2 s of pure compute
+    tr.messages([[0, 1, 4096]], barrier=True)
+
+    res = {}
+    for state in ("fast_wake", "deep_sleep"):
+        pol = Policy(kind="fixed", t_pdt=1e-6, sleep_state=state)
+        r, _ = S.simulate_trace(tr, topo, pol, pm)
+        res[state] = r
+    base, _ = S.simulate_trace(tr, topo, Policy(kind="none"), pm)
+    assert res["deep_sleep"].link_energy < res["fast_wake"].link_energy
+    assert res["fast_wake"].link_energy < base.link_energy
+    # ~all time asleep on ~all links: savings close to the power_frac ratio
+    assert res["deep_sleep"].link_energy < 0.11 * base.link_energy
+    assert res["deep_sleep"].asleep_frac > 0.99
+
+
+def test_makespan_includes_compute_and_barriers(topo, pm):
+    nodes = np.arange(4, dtype=np.int64)
+    tr = Trace(nodes=nodes, name="t")
+    tr.compute(np.array([1.0, 2.0, 0.5, 0.1]))
+    tr.barrier()
+    tr.compute(1.0)
+    r, _ = S.simulate_trace(tr, topo, Policy(kind="none"), pm)
+    np.testing.assert_allclose(r.makespan, 3.0, rtol=1e-12)
+
+
+def test_message_dependency_advances_dst_clock(topo, pm):
+    """dst's next compute starts only after delivery (BSP semantics)."""
+    nodes = np.arange(2, dtype=np.int64)
+    nbytes = 50 << 20                    # 1 ms serialization per hop
+    tr = Trace(nodes=nodes, name="t")
+    tr.compute(np.array([0.0, 0.0]))
+    tr.messages([[0, 1, nbytes]])
+    tr.compute(np.array([0.0, 1.0]))
+    tr.barrier()
+    r, _ = S.simulate_trace(tr, topo, Policy(kind="none"), pm)
+    t_ser = nbytes / 50e9
+    assert r.makespan >= 1.0 + t_ser  # cut-through delivery gates node 1
+
+
+def test_baseline_energy_matches_closed_form(topo, pm):
+    """Policy 'none': link energy = 2 * 24 W * n_links * makespan exactly;
+    node energy = min power + usage-proportional part."""
+    nodes = np.arange(4, dtype=np.int64)
+    tr = Trace(nodes=nodes, name="t")
+    tr.compute(1.0)
+    tr.messages([[0, 1, 1024]], barrier=True)
+    r, _ = S.simulate_trace(tr, topo, Policy(kind="none"), pm)
+    want_link = 2 * pm.port_power * topo.n_links * r.makespan
+    np.testing.assert_allclose(r.link_energy, want_link, rtol=1e-9)
+    want_node = (pm.node_power_min * topo.n_nodes * r.makespan
+                 + (pm.node_power_max - pm.node_power_min) * 4.0)
+    np.testing.assert_allclose(r.node_energy, want_node, rtol=1e-9)
+    np.testing.assert_allclose(
+        r.total_energy, r.link_energy + r.node_energy
+        + pm.switch_power * topo.n_switches * r.makespan, rtol=1e-12)
+
+
+def test_perfbound_learns_small_tpdt_for_long_gaps(topo, pm):
+    """A port seeing only second-scale gaps should learn a t_PDT far below
+    the gaps (power down quickly), while still hitting a degradation bound."""
+    pol = Policy(kind="perfbound", bound=0.01, sleep_state="deep_sleep",
+                 hist_bin_width=10e-6, tpdt_init=10e-3)
+    nodes = np.arange(2, dtype=np.int64)
+    tr = Trace(nodes=nodes, name="t")
+    for _ in range(30):
+        tr.messages([[0, 1, 4096]])
+        tr.compute(0.05)                 # 50 ms gaps
+    tr.barrier()
+    r, _ = S.simulate_trace(tr, topo, pol, pm)
+    net_tpdt = None  # final predictions live inside the sim; check effects:
+    base, _ = S.simulate_trace(tr, topo, Policy(kind="none"), pm)
+    # the used links slept most of the time
+    assert r.asleep_frac > 0.5
+    assert r.link_energy < base.link_energy
+
+
+def test_compare_policies_overheads(topo, pm):
+    """compare_policies: baseline rows are zero-overhead; saving <= 90 %
+    of link power (deep-sleep floor is 10 %)."""
+    apps = small_apps(topo, n_nodes=8)
+    tr = apps["alexnet"]
+    out = S.compare_policies(
+        tr, topo,
+        {"fixed_100us": Policy(kind="fixed", t_pdt=100e-6,
+                               sleep_state="deep_sleep")},
+        pm)
+    assert out["baseline"]["exec_overhead_pct"] == 0.0
+    row = out["fixed_100us"]
+    assert row["link_energy_saved_pct"] <= 90.0 + 1e-6
+    assert row["exec_overhead_pct"] >= -1e-9
+    assert row["n_wake_transitions"] > 0
+
+
+def test_simulator_deterministic(topo, pm):
+    apps = small_apps(topo, n_nodes=8)
+    pol = Policy(kind="perfbound_correct", bound=0.02,
+                 sleep_state="fast_wake")
+    r1, _ = S.simulate_trace(apps["lammps"], topo, pol, pm)
+    r2, _ = S.simulate_trace(apps["lammps"], topo, pol, pm)
+    assert r1.as_dict() == r2.as_dict()
+
+
+def test_collect_events_cover_all_hops(topo, pm):
+    pol = Policy(kind="none")
+    nodes = np.arange(4, dtype=np.int64)
+    tr = Trace(nodes=nodes, name="t")
+    tr.messages([[0, 1, 4096], [1, 2, 4096]])
+    tr.barrier()
+    r, events = S.simulate_trace(tr, topo, pol, pm, collect_events=True)
+    lp = np.concatenate([e[0] for e in events])
+    ts_ = np.concatenate([e[1] for e in events])
+    te_ = np.concatenate([e[2] for e in events])
+    # 0->1 same leaf (2 hops) + 1->2 same leaf (2 hops)
+    assert len(lp) == 4
+    assert (te_ > ts_).all()
+    assert (lp < topo.n_links).all()

@@ -1,0 +1,137 @@
+"""Megafly topology and routing invariants (paper §4 scenario)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.topology.megafly import Megafly, paper_topology, small_topology
+
+
+def test_paper_scenario_counts():
+    """Table 5: 4160 nodes, 1040 switches, 20800 port-ends."""
+    t = paper_topology()
+    assert t.n_nodes == 4160
+    assert t.n_switches == 1040
+    assert t.n_ports == 20800
+    assert t.n_groups == 65
+    assert t.radix == 16
+    assert t.n_global_links == 65 * 64 // 2
+    assert t.n_links == 4160 + 65 * 64 + 2080
+
+
+def test_global_link_bijection():
+    """Every unordered group pair maps to a unique global link id."""
+    t = small_topology()
+    seen = set()
+    for g in range(t.n_groups):
+        for h in range(t.n_groups):
+            if g == h:
+                continue
+            l = int(t.global_link(g, h))
+            assert t.global_link(h, g) == l     # symmetric
+            seen.add(l)
+    assert len(seen) == t.n_global_links
+    lo = t.n_node_links + t.n_ls_links
+    assert min(seen) == lo and max(seen) == lo + t.n_global_links - 1
+
+
+def test_peer_port_is_permutation():
+    """Group g's 64 global ports each lead to a distinct other group."""
+    t = paper_topology()
+    for g in [0, 13, 64]:
+        others = np.array([h for h in range(t.n_groups) if h != g])
+        ports = t.peer_port(g, others)
+        assert sorted(ports.tolist()) == list(range(t.n_groups - 1))
+
+
+def _route_ok(t, s, d):
+    links, dirs, nh = t.routes(np.array([s]), np.array([d]))
+    links, nh = links[0], int(nh[0])
+    if s == d:
+        assert nh == 0
+        return
+    used = links[:nh]
+    assert (used >= 0).all() and (used < t.n_links).all()
+    assert (links[nh:] == -1).all()
+    # first/last hop are the endpoints' node links
+    assert used[0] == s
+    assert used[-1] == d
+    # no link repeats (minimal routing)
+    assert len(set(used.tolist())) == nh
+
+
+def test_route_hop_counts():
+    t = small_topology()  # 5 groups x 4 leaves x 4 nodes/leaf
+    npl, lpg = t.nodes_per_leaf, t.nodes_per_group
+    assert t.hop_distance(0, 1)[0] == 2             # same leaf
+    assert t.hop_distance(0, npl)[0] == 4           # same group, diff leaf
+    assert t.hop_distance(0, lpg)[0] == 5           # inter group
+    assert t.hop_distance(7, 7)[0] == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 79), st.integers(0, 79))
+def test_route_validity_property(s, d):
+    t = small_topology()
+    _route_ok(t, s, d)
+
+
+def test_route_validity_paper_topology():
+    t = paper_topology()
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, t.n_nodes, 200)
+    dst = rng.integers(0, t.n_nodes, 200)
+    links, dirs, nh = t.routes(src, dst)
+    for i in range(len(src)):
+        _route_ok(t, int(src[i]), int(dst[i]))
+    # hop-count classes
+    gs, gd = t.node_group(src), t.node_group(dst)
+    ls, ld = t.node_leaf(src), t.node_leaf(dst)
+    want = np.where(src == dst, 0,
+                    np.where((gs == gd) & (ls == ld), 2,
+                             np.where(gs == gd, 4, 5)))
+    np.testing.assert_array_equal(nh, want)
+
+
+def test_inter_group_route_uses_the_unique_global_link():
+    t = small_topology()
+    s, d = 0, t.nodes_per_group * 2 + 5   # group 0 -> group 2
+    links, dirs, nh = t.routes(np.array([s]), np.array([d]))
+    assert int(nh[0]) == 5
+    gl = int(t.global_link(0, 2))
+    assert gl in links[0].tolist()
+    # global hop direction: 0 transmits lo->hi group
+    pos = links[0].tolist().index(gl)
+    assert dirs[0, pos] == 0
+
+
+def test_dmodk_spine_selection():
+    """Intra-group up-path spine is dst % spines (D-mod-k)."""
+    t = small_topology()
+    d = 9   # leaf 2, spine should be 9 % 4 = 1
+    links, _, nh = t.routes(np.array([0]), np.array([d]))
+    up = int(links[0, 1])
+    assert up == int(t.ls_link(0, 0, d % t.spines_per_group))
+
+
+def test_routes_deterministic():
+    t = small_topology()
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, t.n_nodes, 64)
+    dst = rng.integers(0, t.n_nodes, 64)
+    a = t.routes(src, dst)
+    b = t.routes(src, dst)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_direction_disambiguates_duplex():
+    """A->B and B->A use the same link ids with opposite direction bits."""
+    t = small_topology()
+    l1, d1, n1 = t.routes(np.array([0]), np.array([1]))
+    l2, d2, n2 = t.routes(np.array([1]), np.array([0]))
+    assert n1[0] == n2[0] == 2
+    assert set(l1[0, :2].tolist()) == set(l2[0, :2].tolist())
+    # node links: up = dir 0 at the source, down = dir 1 at the destination
+    assert d1[0, 0] == 0 and d1[0, 1] == 1
+    assert d2[0, 0] == 0 and d2[0, 1] == 1

@@ -1,0 +1,61 @@
+"""Trace file round-trip: saved traces replay identically."""
+import numpy as np
+import pytest
+
+from repro.core.eee import Policy
+from repro.core.simulator import simulate_trace
+from repro.traffic.generators import small_apps
+from repro.traffic.io import load_trace, save_trace
+from repro.traffic.trace import Trace
+
+
+@pytest.mark.parametrize("app", ["lammps", "patmos", "mlwf", "alexnet"])
+def test_roundtrip_structure(tmp_path, topo, app):
+    tr = small_apps(topo, n_nodes=8)[app]
+    p = tmp_path / f"{app}.npz"
+    save_trace(p, tr)
+    tr2 = load_trace(p)
+    assert tr2.name == tr.name
+    np.testing.assert_array_equal(tr2.nodes, tr.nodes)
+    assert tr2.n_messages == tr.n_messages
+    assert tr2.total_bytes == tr.total_bytes
+    live = [s for s in tr.steps
+            if (s.compute_nodes is not None and len(s.compute_nodes))
+            or (s.msgs is not None and len(s.msgs)) or s.barrier]
+    assert len(tr2.steps) == len(live)
+
+
+def test_roundtrip_simulates_identically(tmp_path, topo, pm):
+    tr = small_apps(topo, n_nodes=8)["alexnet"]
+    p = tmp_path / "t.npz"
+    save_trace(p, tr)
+    tr2 = load_trace(p)
+    pol = Policy(kind="perfbound_correct", bound=0.01,
+                 sleep_state="deep_sleep")
+    r1, _ = simulate_trace(tr, topo, pol, pm)
+    r2, _ = simulate_trace(tr2, topo, pol, pm)
+    assert r1.as_dict() == r2.as_dict()
+
+
+def test_barrier_only_steps(tmp_path):
+    tr = Trace(nodes=np.arange(4, dtype=np.int64), name="b")
+    tr.compute(1.0)
+    tr.barrier()
+    tr.messages([[0, 1, 64]], barrier=True)
+    p = tmp_path / "b.npz"
+    save_trace(p, tr)
+    tr2 = load_trace(p)
+    assert tr2.steps[1].barrier and tr2.steps[1].msgs is None
+    assert tr2.steps[2].barrier and len(tr2.steps[2].msgs) == 1
+
+
+def test_version_check(tmp_path):
+    tr = Trace(nodes=np.arange(2, dtype=np.int64))
+    tr.compute(1.0)
+    p = tmp_path / "v.npz"
+    save_trace(p, tr)
+    data = dict(np.load(p, allow_pickle=False))
+    data["meta"] = np.array([99], np.int64)
+    np.savez(p, **data)
+    with pytest.raises(ValueError, match="format"):
+        load_trace(p)

@@ -1,0 +1,193 @@
+"""Training substrate: optimizer, grad accumulation, compression, data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.data.pipeline import SyntheticLM, make_pipeline
+from repro.training.compression import (compression_ratio, compress_tree,
+                                        decompress_tree, dequantize_int8,
+                                        ef_quantize, init_error_feedback,
+                                        quantize_int8)
+from repro.training.loop import (cross_entropy, init_train_state,
+                                 make_train_step)
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      clip_by_global_norm, global_norm,
+                                      init_opt_state)
+
+CFG = get_config("qwen2-1.5b").smoke()
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_moves_against_gradient():
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    grads = {"w": jnp.ones((4,), jnp.float32)}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    p1, opt, gn = adamw_update(cfg, params, grads, opt)
+    assert (np.asarray(p1["w"]) < 1.0).all()
+    np.testing.assert_allclose(float(gn), 2.0)      # ||1,1,1,1|| = 2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 4.0), "b": jnp.full((4,), 3.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-6)
+    # under the cap: untouched
+    same, _ = clip_by_global_norm(g, 1e9)
+    np.testing.assert_allclose(np.asarray(same["a"]), 4.0)
+
+
+def test_warmup_schedule():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10)
+    from repro.training.optimizer import lr_at
+    assert float(lr_at(cfg, jnp.asarray(1))) == pytest.approx(0.1)
+    assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def test_cross_entropy_ignores_masked_labels():
+    logits = jnp.zeros((1, 4, 8), jnp.float32)
+    labels = jnp.array([[1, 2, -1, -1]], jnp.int32)
+    ce = cross_entropy(logits, labels, 8)
+    np.testing.assert_allclose(float(ce), np.log(8), rtol=1e-6)
+
+
+def test_cross_entropy_perfect_prediction():
+    labels = jnp.array([[3, 5]], jnp.int32)
+    logits = jax.nn.one_hot(labels, 8) * 100.0
+    assert float(cross_entropy(logits, labels, 8)) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Gradient accumulation == large batch
+# ---------------------------------------------------------------------------
+
+
+def test_grad_accum_equivalence():
+    state = init_train_state(CFG, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, CFG.vocab_size, (4, 16)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, CFG.vocab_size, (4, 16)),
+                              jnp.int32),
+    }
+    s1, m1 = jax.jit(make_train_step(CFG, grad_accum=1))(state, batch)
+    s2, m2 = jax.jit(make_train_step(CFG, grad_accum=2))(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 + error feedback)
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_roundtrip_error_bound(rng):
+    x = jnp.asarray(rng.normal(size=(1024,)) * 3.0, jnp.float32)
+    q, s, meta = quantize_int8(x, block=128)
+    deq = dequantize_int8(q, s, meta)
+    err = np.abs(np.asarray(deq - x))
+    # per-block bound: scale/2 = max|block|/254
+    blocks = np.asarray(x).reshape(-1, 128)
+    bound = np.repeat(np.abs(blocks).max(1) / 254.0, 128) + 1e-7
+    assert (err <= bound).all()
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_removes_bias(rng):
+    """Averaging EF-quantized copies of a constant gradient over many steps
+    converges to the true value (EF cancels quantization bias)."""
+    g = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    n = 50
+    for _ in range(n):
+        q, s, meta, err = ef_quantize(g, err, block=64)
+        acc = acc + dequantize_int8(q, s, meta)
+    np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g),
+                               atol=5e-3)
+
+
+def test_compress_tree_roundtrip(rng):
+    tree = {"a": jnp.asarray(rng.normal(size=(130,)), jnp.float32),
+            "b": {"c": jnp.asarray(rng.normal(size=(4, 7)), jnp.float32)}}
+    ef = init_error_feedback(tree)
+    payload, new_ef = compress_tree(tree, ef, block=32)
+    out = decompress_tree(payload)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0.05)
+
+
+def test_compression_ratio_close_to_quarter():
+    params = {"w": jnp.zeros((1 << 16,), jnp.float32)}
+    r = compression_ratio(params, block=2048)
+    assert 0.25 < r < 0.26
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_deterministic_and_restartable():
+    src = SyntheticLM(256, 16, 8, seed=7)
+    a = src.batch_at(5)
+    b = src.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_pipeline_sharding_partitions_global_batch():
+    full = SyntheticLM(256, 16, 8, seed=7)
+    shards = [SyntheticLM(256, 16, 8, seed=7, shard=i, num_shards=2)
+              for i in range(2)]
+    fb = full.batch_at(3)
+    sb = [s.batch_at(3) for s in shards]
+    assert sb[0]["tokens"].shape == (4, 16)
+    # each shard is internally deterministic; shards differ from each other
+    assert not np.array_equal(sb[0]["tokens"], sb[1]["tokens"])
+
+
+def test_pipeline_markov_structure():
+    """Every transition in the stream is a legal edge of the chain."""
+    src = SyntheticLM(64, 32, 4, seed=1)
+    b = src.batch_at(0)
+    toks = b["tokens"]
+    for row in toks:
+        for t in range(len(row) - 1):
+            assert row[t + 1] in src.next_tok[row[t]]
+
+
+def test_prefetcher_yields_in_order():
+    it = make_pipeline(CFG, seq_len=8, global_batch=2, prefetch=2)
+    steps = [next(it)[0] for _ in range(5)]
+    assert steps == [0, 1, 2, 3, 4]
+    it.close()
+
+
+def test_pipeline_resume_from_step():
+    it = make_pipeline(CFG, seq_len=8, global_batch=2, start_step=7,
+                       prefetch=2)
+    step, batch = next(it)
+    assert step == 7
+    src = SyntheticLM(CFG.vocab_size, 8, 2, seed=0)
+    np.testing.assert_array_equal(batch["tokens"], src.batch_at(7)["tokens"])
+    it.close()
