@@ -2,10 +2,14 @@
 energy saved, packet-latency overhead, per app x sleep state x t_PDT.
 
 The 9-point t_PDT grid runs on the COUPLED simulator (exact §4 protocol):
-overheads feed back into timing, as in the paper.  Qualitative targets
-(§4.1.1): Deep Sleep with t_PDT <= 10 µs more than doubles LAMMPS runtime
-while Fast Wake stays < 10 %; savings ~10 % at t_PDT >= 100 µs; fixed
-t_PDT >= 1 ms barely saves anything.
+overheads feed back into timing, as in the paper.  All fixed-t_PDT policies
+share one static structure, so the entire grid (both sleep states) replays
+each trace ONCE through the batched sweep engine — one compiled scan per
+chunk with a policy-batch axis — instead of once per grid point.
+
+Qualitative targets (§4.1.1): Deep Sleep with t_PDT <= 10 µs more than
+doubles LAMMPS runtime while Fast Wake stays < 10 %; savings ~10 % at
+t_PDT >= 100 µs; fixed t_PDT >= 1 ms barely saves anything.
 """
 from __future__ import annotations
 

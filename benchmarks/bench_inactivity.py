@@ -6,6 +6,11 @@ the quantities Fig 1's histograms/CDFs encode.  The paper's qualitative
 claims validated here: AlexNet ~90 % of gaps in the sub-µs..ns decade
 (§4.4.1); MLWF 99 % within the millisecond range (§4.3.1); PATMOS has few,
 enormous gaps (§4.2).
+
+A second row per app closes the loop from Fig 1 to policy choice: a dense
+fixed-t_PDT grid runs through the batched sweep engine (one coupled replay
+for the whole grid) and reports the energy-optimal t_PDT — which should
+land just above the app's gap distribution knee.
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ from benchmarks.common import PM, Row, get_apps, get_topo, timed
 from repro.core import decoupled as D
 from repro.core import simulator as S
 from repro.core.eee import Policy
+from repro.core.sweep import sweep_policies
 
 
 def port_gap_stats(topo, trace):
@@ -44,4 +50,16 @@ def run(scale: str = "small"):
             f"fig1/{name}", us,
             f"port={port} n_gaps={len(pg)} p50={p50:.3g}s p99={p99:.3g}s "
             f"frac<1ms={sub_ms:.2f} makespan={res.makespan:.3g}s"))
+        # Fig 1 -> policy choice: the whole t_PDT curve in ONE batched
+        # replay (all fixed policies share static structure)
+        grid = {f"t={t:g}": Policy(kind="fixed", t_pdt=t,
+                                   sleep_state="deep_sleep")
+                for t in np.geomspace(1e-7, 1e-1, 13)}
+        swept, us_grid = timed(sweep_policies, trace, topo, grid, PM)
+        best = min(swept, key=lambda k: swept[k].link_energy)
+        rows.append(Row(
+            f"fig1/{name}/tpdt_curve", us_grid / len(grid),
+            f"best_{best} link_e={swept[best].link_energy:.4g}J "
+            f"asleep={swept[best].asleep_frac:.2f} "
+            f"grid={len(grid)}pts_1_replay"))
     return rows

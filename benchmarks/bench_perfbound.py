@@ -1,6 +1,13 @@
 """Paper Figs 8/11/14/17: PerfBound vs PerfBoundCorrect — 3 degradation
 thresholds x 3 histogram-management modes x 2 sleep states, per app.
 
+Runs on the batched sweep engine (repro.core.sweep): the whole grid groups
+by static structure and replays each trace a handful of times instead of
+once per cell — one compiled scan per chunk per group.  The first app also
+reports a ``sweep_speedup`` row timing the batched grid against the serial
+per-policy replay (both ends cold, compiles included, as a fresh grid run
+experiences them).
+
 Headline validation targets: PerfBoundCorrect's latency overhead <=
 PerfBound's at equal threshold (Figs 8c/11a: reduced 'to a third' for
 PATMOS Deep Sleep); energy within a few % of PerfBound (sometimes better —
@@ -12,7 +19,8 @@ from __future__ import annotations
 from benchmarks.common import (BOUNDS, HIST_MODES, PM, Row, SLEEP_STATES,
                                get_apps, get_topo, timed)
 from repro.core.eee import Policy
-from repro.core.simulator import compare_policies
+from repro.core.simulator import compare_policies, simulate_trace
+from repro.core.sweep import group_policies
 
 
 def run(scale: str = "small"):
@@ -20,7 +28,7 @@ def run(scale: str = "small"):
     bounds = BOUNDS if scale == "paper" else [0.01, 0.05]
     modes = HIST_MODES if scale == "paper" else ["keep_all", "circular"]
     rows = []
-    for name, trace in get_apps(scale, topo).items():
+    for i, (name, trace) in enumerate(get_apps(scale, topo).items()):
         pols = {}
         for kind, tag in (("perfbound", "pb"), ("perfbound_correct", "pbc")):
             for st in SLEEP_STATES:
@@ -50,4 +58,18 @@ def run(scale: str = "small"):
                 f"saved={r['energy_saved_pct']:.2f}% "
                 f"link_saved={r['link_energy_saved_pct']:.2f}% "
                 f"miss_rate={r['misses']/max(r['hits']+r['misses'],1):.3f}"))
+        if i == 0:
+            # serial baseline over the SAME workload — the grid plus the
+            # always-on baseline compare_policies injects (its own compile
+            # cache keys per policy, so both sides pay real compile bills)
+            def _serial():
+                return [simulate_trace(trace, topo, p, PM)[0]
+                        for p in [Policy(kind="none"), *pols.values()]]
+            _, us_serial = timed(_serial)
+            n_groups = len(group_policies(pols))
+            rows.append(Row(
+                f"perfbound/{name}/sweep_speedup", us,
+                f"batched={us/1e6:.1f}s serial={us_serial/1e6:.1f}s "
+                f"speedup={us_serial/max(us, 1):.2f}x "
+                f"policies={len(pols)} groups={n_groups}"))
     return rows

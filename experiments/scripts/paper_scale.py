@@ -1,5 +1,10 @@
 """Paper-scale validation: the exact §4 scenario (4160-node Megafly,
-64-node app traces) for the headline policies.  Writes CSV to stdout."""
+64-node app traces) for the headline policies.  Writes CSV to stdout.
+
+Runs on the batched sweep engine: the four headline policies collapse into
+three static-structure groups (both fixed-t_PDT variants share one batched
+replay).  ``max_group`` caps the policy-batch width so predictor state
+(O(B x 10400 links x 200 bins) f64) stays bounded at paper scale."""
 import sys, time
 sys.path.insert(0, "src")
 from repro.core.eee import Policy, PowerModel
@@ -24,7 +29,7 @@ apps = {
 print("app,policy,exec_oh_pct,lat_oh_pct,saved_pct,link_saved_pct,miss_rate", flush=True)
 for app, tr in apps.items():
     t0 = time.time()
-    out = compare_policies(tr, topo, pols, pm)
+    out = compare_policies(tr, topo, pols, pm, max_group=8)
     for name, r in out.items():
         mr = r["misses"] / max(r["hits"] + r["misses"], 1)
         print(f"{app},{name},{r['exec_overhead_pct']:.3f},"

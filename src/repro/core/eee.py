@@ -78,6 +78,66 @@ class Policy:
         return self.kind in ("perfbound", "perfbound_correct")
 
 
+# ---------------------------------------------------------------------------
+# Static-structure / numeric-parameter split (the batched-sweep contract)
+# ---------------------------------------------------------------------------
+#
+# A Policy factors into
+#   * STATIC structure — fields that change compiled code: predictor kind,
+#     histogram management mode, array sizes, and boolean feature flags.
+#     Policies sharing a static key can run side by side in one compiled
+#     batched scan (see repro.core.sweep).
+#   * NUMERIC parameters — plain floats the compiled code reads from a
+#     parameter vector: timers, bounds, transition times, bin geometry.
+#     ``sleep_state`` deliberately lowers to numbers (t_w/t_s/power_frac),
+#     so Fast Wake and Deep Sleep variants batch together.
+
+PARAM_FIELDS = (
+    "t_pdt", "tpdt_init", "max_tpdt", "bound", "sync_overhead",
+    "t_w", "t_s", "power_frac",
+    "hist_bin_width", "hist_log_min", "hist_log_max", "hist_clear_n",
+    "hist_decay",
+)
+
+STATIC_FIELDS = ("kind", "hist_mode", "hist_bins", "hist_log_bins",
+                 "ring_n", "n_r", "cf_mode", "record_hist")
+
+# every Policy field must be classified as numeric param, static structure,
+# or sleep_state (which lowers to the t_w/t_s/power_frac params) — a field
+# in neither set would be silently shared across batch lanes
+assert (set(PARAM_FIELDS) - {"t_w", "t_s", "power_frac"}) \
+    | set(STATIC_FIELDS) | {"sleep_state"} \
+    == {f.name for f in dataclasses.fields(Policy)}, \
+    "new Policy field not classified in PARAM_FIELDS/STATIC_FIELDS"
+
+
+def policy_params(policy: Policy) -> dict:
+    """The policy's numeric parameter vector as a plain float dict.
+
+    Passing these back into the simulator/predictor functions reproduces the
+    policy exactly; stacking several dicts along a leading axis drives the
+    batched sweep.
+    """
+    st = policy.state
+    out = {f: float(getattr(policy, f)) for f in PARAM_FIELDS
+           if f not in ("t_w", "t_s", "power_frac")}
+    out["t_w"] = st.t_w
+    out["t_s"] = st.t_s
+    out["power_frac"] = st.power_frac
+    return out
+
+
+def static_key(policy: Policy) -> tuple:
+    """Hashable static-structure key: policies with equal keys compile to
+    the same batched program (numeric params become vector lanes).
+
+    ``hist_decay`` contributes only a boolean (the decay multiply is a
+    different program, but its rate is numeric).
+    """
+    return tuple(getattr(policy, f) for f in STATIC_FIELDS) + \
+        (policy.hist_decay < 1.0,)
+
+
 @dataclass(frozen=True)
 class PowerModel:
     """Table 5: system power inventory (W) + link bandwidth."""

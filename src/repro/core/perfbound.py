@@ -29,7 +29,21 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.eee import policy_params
+
 MAXH = 7  # hop-count histogram rows 0..6 (Megafly max 5, fat-tree 6)
+
+
+def _params(policy, params):
+    """Numeric parameter vector: the policy's own scalars by default, or a
+    caller-supplied dict (possibly of traced per-lane values) for the
+    batched sweep.  Static structure always comes from ``policy``."""
+    return policy_params(policy) if params is None else params
+
+
+def _log(x):
+    # python floats keep the exact libm constant-folding of the serial path
+    return math.log(x) if isinstance(x, (int, float)) else jnp.log(x)
 
 
 # ---------------------------------------------------------------------------
@@ -37,23 +51,29 @@ MAXH = 7  # hop-count histogram rows 0..6 (Megafly max 5, fat-tree 6)
 # ---------------------------------------------------------------------------
 
 
-def bin_index(gap, policy):
+def bin_index(gap, policy, params=None):
     """gap (seconds) -> bin id in [0, B)."""
+    p = _params(policy, params)
     B = policy.hist_bins
     if policy.hist_log_bins:
-        lo, hi = math.log(policy.hist_log_min), math.log(policy.hist_log_max)
-        x = (jnp.log(jnp.maximum(gap, policy.hist_log_min)) - lo) / (hi - lo)
+        lo, hi = _log(p["hist_log_min"]), _log(p["hist_log_max"])
+        x = (jnp.log(jnp.maximum(gap, p["hist_log_min"])) - lo) / (hi - lo)
         return jnp.clip((x * B).astype(jnp.int32), 0, B - 1)
-    return jnp.clip((gap / policy.hist_bin_width).astype(jnp.int32), 0, B - 1)
+    return jnp.clip((gap / p["hist_bin_width"]).astype(jnp.int32), 0, B - 1)
 
 
-def bin_centers(policy):
+def bin_centers(policy, params=None):
+    p = _params(policy, params)
     B = policy.hist_bins
     if policy.hist_log_bins:
-        lo, hi = math.log(policy.hist_log_min), math.log(policy.hist_log_max)
-        edges = np.exp(np.linspace(lo, hi, B + 1))
-        return jnp.asarray(np.sqrt(edges[:-1] * edges[1:]))
-    return (jnp.arange(B) + 0.5) * policy.hist_bin_width
+        if isinstance(p["hist_log_min"], (int, float)):
+            lo, hi = math.log(p["hist_log_min"]), math.log(p["hist_log_max"])
+            edges = np.exp(np.linspace(lo, hi, B + 1))
+            return jnp.asarray(np.sqrt(edges[:-1] * edges[1:]))
+        lo, hi = jnp.log(p["hist_log_min"]), jnp.log(p["hist_log_max"])
+        edges = jnp.exp(lo + (hi - lo) * jnp.arange(B + 1) / B)
+        return jnp.sqrt(edges[:-1] * edges[1:])
+    return (jnp.arange(B) + 0.5) * p["hist_bin_width"]
 
 
 # ---------------------------------------------------------------------------
@@ -61,7 +81,7 @@ def bin_centers(policy):
 # ---------------------------------------------------------------------------
 
 
-def init_state(n_links, policy):
+def init_state(n_links, policy, params=None):
     P, B = n_links, policy.hist_bins
     st = {
         "counts": jnp.zeros((P, B), jnp.float64),
@@ -69,7 +89,7 @@ def init_state(n_links, policy):
         "total": jnp.zeros((P,), jnp.int64),
         "win_start": jnp.zeros((P,), jnp.float64),
         "hops": jnp.zeros((P, MAXH), jnp.int64),
-        "tpdt": jnp.full((P,), _initial_tpdt(policy), jnp.float64),
+        "tpdt": jnp.full((P,), _initial_tpdt(policy, params), jnp.float64),
     }
     if policy.hist_mode == "circular":
         R = policy.ring_n
@@ -86,12 +106,13 @@ def init_state(n_links, policy):
     return st
 
 
-def _initial_tpdt(policy):
+def _initial_tpdt(policy, params=None):
+    p = _params(policy, params)
     if policy.kind == "none":
         return jnp.inf
     if policy.kind == "fixed":
-        return policy.t_pdt
-    return policy.tpdt_init
+        return p["t_pdt"]
+    return p["tpdt_init"]
 
 
 # ---------------------------------------------------------------------------
@@ -100,10 +121,11 @@ def _initial_tpdt(policy):
 # ---------------------------------------------------------------------------
 
 
-def record_gaps(st, lp, gap, t_now, active, policy):
+def record_gaps(st, lp, gap, t_now, active, policy, params=None):
     """Insert inactivity gaps.  lp,gap,t_now,active: (K,)."""
+    p = _params(policy, params)
     do = active & (gap > 0)
-    b = bin_index(gap, policy)
+    b = bin_index(gap, policy, p)
     g = jnp.where(do, gap, 0.0)
     inc = do.astype(st["counts"].dtype)
 
@@ -145,14 +167,14 @@ def record_gaps(st, lp, gap, t_now, active, policy):
     if policy.hist_decay < 1.0:
         # exponential recency bias (beyond-paper, paper §5 future work):
         # old evidence fades at ``hist_decay`` per new sample on that port
-        d = jnp.where(do, policy.hist_decay, 1.0)[:, None]
+        d = jnp.where(do, p["hist_decay"], 1.0)[:, None]
         counts = counts.at[lp].multiply(d)
         sums = sums.at[lp].multiply(d)
         # the budget window X follows the effective sample horizon
         # (~1/(1-decay) samples): pull win_start toward t_now at the same
         # rate so N = l*X/t_w shrinks consistently with the history
         ws = st["win_start"][lp]
-        new_ws = ws + (1 - policy.hist_decay) * (t_now - ws)
+        new_ws = ws + (1 - p["hist_decay"]) * (t_now - ws)
         st = dict(st, win_start=st["win_start"].at[lp].set(
             jnp.where(do, new_ws, ws)))
     counts = counts.at[lp, b].add(inc)
@@ -161,7 +183,7 @@ def record_gaps(st, lp, gap, t_now, active, policy):
     st = dict(st, counts=counts, sums=sums, total=total)
 
     if policy.hist_mode == "self_clear":
-        clear = active & (total[lp] >= policy.hist_clear_n)
+        clear = active & (total[lp] >= p["hist_clear_n"])
         zrow = jnp.zeros((lp.shape[0], policy.hist_bins), jnp.float64)
         st["counts"] = st["counts"].at[lp].set(
             jnp.where(clear[:, None], zrow, st["counts"][lp]))
@@ -215,13 +237,14 @@ def l_factor(hops, bound):
     return jnp.where(tot > 0, l, bound)
 
 
-def tpdt_select(counts, sums, N, total, policy):
+def tpdt_select(counts, sums, N, total, policy, params=None):
     """PerfBound bin selection (vectorized over leading dims).
 
     From the highest bin downwards accumulate counts; pick the leftmost bin
     whose tail-accumulation is <= N; t_PDT = mean of that bin.
     """
-    centers = bin_centers(policy)
+    p = _params(policy, params)
+    centers = bin_centers(policy, p)
     rcum = jnp.cumsum(counts[..., ::-1], axis=-1)[..., ::-1]
     feasible = rcum <= N[..., None]
     found = feasible.any(-1)
@@ -229,8 +252,8 @@ def tpdt_select(counts, sums, N, total, policy):
     cj = jnp.take_along_axis(counts, j[..., None], -1)[..., 0]
     sj = jnp.take_along_axis(sums, j[..., None], -1)[..., 0]
     mean = jnp.where(cj > 0, sj / jnp.maximum(cj, 1e-30), centers[j])
-    t = jnp.where(found, mean, policy.max_tpdt)
-    return jnp.where(total > 0, t, policy.tpdt_init)
+    t = jnp.where(found, mean, p["max_tpdt"])
+    return jnp.where(total > 0, t, p["tpdt_init"])
 
 
 def pbc_cf(reg, ratio_log, n_seen, policy):
@@ -245,15 +268,16 @@ def pbc_cf(reg, ratio_log, n_seen, policy):
     return miss_pct * jnp.where(miss_cnt > 0, gmean, 1.0)
 
 
-def compute_tpdt(st, lp, t_now, t_w, policy):
+def compute_tpdt(st, lp, t_now, t_w, policy, params=None):
     """Recalculate t_PDT for link rows ``lp`` at time ``t_now``.  (K,)->(K,)."""
+    p = _params(policy, params)
     counts = st["counts"][lp]
     sums = st["sums"][lp]
     total = st["total"][lp]
     X = jnp.maximum(t_now - st["win_start"][lp], 0.0)
-    l = l_factor(st["hops"][lp], policy.bound)
+    l = l_factor(st["hops"][lp], p["bound"])
     N = l * X / t_w
-    t = tpdt_select(counts, sums, N, total, policy)
+    t = tpdt_select(counts, sums, N, total, policy, p)
     if policy.kind == "perfbound_correct":
         cf = pbc_cf(st["reg"][lp], st["ratio_log"][lp], st["n_seen"][lp],
                     policy)
@@ -261,12 +285,12 @@ def compute_tpdt(st, lp, t_now, t_w, policy):
             t = t * (1.0 + cf)
         else:
             t = t * jnp.maximum(cf, 1.0)
-        t = jnp.minimum(t, policy.max_tpdt)
+        t = jnp.minimum(t, p["max_tpdt"])
     return t
 
 
-def compute_tpdt_all(st, t_now, t_w, policy):
+def compute_tpdt_all(st, t_now, t_w, policy, params=None):
     """Batched periodic recalculation over every link (kernel-accelerated
     variant lives in repro.kernels.ops.tpdt_select_op)."""
     P = st["counts"].shape[0]
-    return compute_tpdt(st, jnp.arange(P), t_now, t_w, policy)
+    return compute_tpdt(st, jnp.arange(P), t_now, t_w, policy, params)

@@ -37,12 +37,12 @@ MAX_HOPS = 5
 # ---------------------------------------------------------------------------
 
 
-def init_net(n_links, policy: Policy):
+def init_net(n_links, policy: Policy, params=None):
     P = n_links + 1  # +1 dummy row absorbing masked writes
     # PDT timers are armed at t=0 (ports start awake, counting down) — the
     # same convention as the decoupled per-port replay, so both paths see
     # identical first-arrival semantics.
-    dl0 = float(pb._initial_tpdt(policy))
+    dl0 = pb._initial_tpdt(policy, params)
     return {
         "dir_free": jnp.zeros((2 * n_links + 1,), jnp.float64),
         "last_end": jnp.zeros((P,), jnp.float64),
@@ -52,7 +52,7 @@ def init_net(n_links, policy: Policy):
         "n_wake": jnp.zeros((P,), jnp.int64),
         "n_hit": jnp.zeros((P,), jnp.int64),
         "n_miss": jnp.zeros((P,), jnp.int64),
-        "pred": pb.init_state(P, policy),
+        "pred": pb.init_state(P, policy, params),
     }
 
 
@@ -61,12 +61,13 @@ def init_net(n_links, policy: Policy):
 # ---------------------------------------------------------------------------
 
 
-def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int):
+def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
+                  params=None):
     links, dirs, nhops, t_inj, nbytes, valid = msg
     H = links.shape[-1]           # route width (Megafly 5, fat-tree 6, ...)
-    st = policy.state
-    t_w = st.t_w + policy.sync_overhead
-    t_s = st.t_s
+    p = pb._params(policy, params)
+    t_w = p["t_w"] + p["sync_overhead"]
+    t_s = p["t_s"]
 
     active = (jnp.arange(H) < nhops) & valid & (links >= 0)
     lp = jnp.where(active, links, n_links)                 # dummy row when off
@@ -133,13 +134,13 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int):
     # ---- predictors --------------------------------------------------------
     pred = net["pred"]
     if policy.adaptive or policy.record_hist:
-        pred = pb.record_gaps(pred, lp, gap, t_avail, active, policy)
+        pred = pb.record_gaps(pred, lp, gap, t_avail, active, policy, p)
         pred = pb.record_hops(pred, lp, nhops - jnp.arange(H), active, policy)
     if policy.kind == "perfbound_correct":
         ratio = gap / jnp.maximum(tpdt_prev, 1e-12)
         pred = pb.record_outcomes(pred, lp, asleep, ratio, active, policy)
     if policy.adaptive:
-        new_tpdt = pb.compute_tpdt(pred, lp, t_end, st.t_w, policy)
+        new_tpdt = pb.compute_tpdt(pred, lp, t_end, p["t_w"], policy, p)
         pred = dict(pred, tpdt=pred["tpdt"].at[lp].set(
             jnp.where(active, new_tpdt, pred["tpdt"][lp])))
     net["pred"] = pred
@@ -238,9 +239,15 @@ def summarize(net, t_end, busy_node_secs, lat_sum, lat_max, n_msgs,
 # ---------------------------------------------------------------------------
 
 
+def _bucket_cap(M, bucket_min=64):
+    """Power-of-two chunk capacity shared by the serial and batched padders
+    (identical bucketing keeps their recompilation behaviour aligned)."""
+    return max(bucket_min, 1 << (max(M - 1, 1)).bit_length())
+
+
 def _pad_msgs(links, dirs, nhops, t_inj, nbytes, bucket_min=64):
     M = len(nhops)
-    cap = max(bucket_min, 1 << (max(M - 1, 1)).bit_length())
+    cap = _bucket_cap(M, bucket_min)
     pad = cap - M
 
     def p(a, fill=0):
@@ -304,17 +311,28 @@ def simulate_trace(trace, topo, policy: Policy, pm: PowerModel | None = None,
 
 
 def compare_policies(trace, topo, policies: dict, pm: PowerModel | None = None,
-                     baseline: str = "baseline"):
+                     baseline: str = "baseline",
+                     max_group: int | None = None):
     """Run a trace under several policies; report overheads vs the baseline
-    (always-on) run — the paper's evaluation protocol (§4)."""
+    (always-on) run — the paper's evaluation protocol (§4).
+
+    Runs on the batched sweep engine (``repro.core.sweep``): policies
+    sharing static structure replay the trace together in one compiled
+    scan per chunk instead of once each.
+    """
+    from repro.core.sweep import sweep_policies  # late: sweep imports us
     pm = pm or PowerModel()
-    base_policy = Policy(kind="none")
-    base, _ = simulate_trace(trace, topo, base_policy, pm)
+    base_key = "__baseline__"
+    while base_key in policies:
+        base_key = "_" + base_key
+    results = sweep_policies(trace, topo,
+                             {base_key: Policy(kind="none"), **policies},
+                             pm, max_group=max_group)
+    base = results.pop(base_key)
     out = {baseline: dict(base.as_dict(), exec_overhead_pct=0.0,
                           latency_overhead_pct=0.0, energy_saved_pct=0.0,
                           link_energy_saved_pct=0.0)}
-    for name, pol in policies.items():
-        r, _ = simulate_trace(trace, topo, pol, pm)
+    for name, r in results.items():
         out[name] = dict(
             r.as_dict(),
             exec_overhead_pct=100 * (r.makespan / base.makespan - 1),

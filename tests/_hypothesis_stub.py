@@ -1,0 +1,256 @@
+"""Minimal in-repo fallback for ``hypothesis`` (see requirements-dev.txt).
+
+The real library is the preferred test dependency; this shim only exists so
+the tier-1 suite collects and runs in hermetic environments where installing
+it is not possible.  It implements the small strategy surface the test-suite
+actually uses (integers, floats, lists, sampled_from, booleans, data,
+``.map``, and ``hypothesis.extra.numpy.arrays``) with deterministic
+per-test seeding: @given draws ``max_examples`` pseudo-random examples and
+runs the test body once per example.  No shrinking, no database, no health
+checks — failures report the drawn values instead.
+
+Installed lazily from ``conftest.py`` via :func:`install`, which registers
+fake ``hypothesis``, ``hypothesis.strategies`` and ``hypothesis.extra.numpy``
+modules in ``sys.modules`` only when the real package is absent.
+"""
+from __future__ import annotations
+
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    def __init__(self, draw, label="strategy"):
+        self._draw = draw
+        self._label = label
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)),
+                        f"{self._label}.map")
+
+    def __repr__(self):
+        return f"<stub {self._label}>"
+
+
+class DataObject:
+    """Supports ``data.draw(strategy)`` inside a test body."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.draw(self._rng)
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)),
+                    f"integers({min_value}, {max_value})")
+
+
+def floats(min_value=0.0, max_value=1.0, *, allow_nan=None,
+           allow_infinity=None, allow_subnormal=None, width=64,
+           exclude_min=False, exclude_max=False):
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        x = float(rng.uniform(lo, hi))
+        if width == 32:
+            x = float(np.float32(x))
+            # float32 rounding must not escape the requested interval
+            x = min(max(x, lo), hi)
+        return x
+
+    return Strategy(draw, f"floats({lo}, {hi})")
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans")
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))],
+                    "sampled_from")
+
+
+def lists(elements, *, min_size=0, max_size=None, unique=False):
+    cap = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        n = int(rng.integers(min_size, cap + 1))
+        out, seen = [], set()
+        attempts = 0
+        while len(out) < n and attempts < 100 * (n + 1):
+            v = elements.draw(rng)
+            attempts += 1
+            if unique:
+                key = v
+                if key in seen:
+                    continue
+                seen.add(key)
+            out.append(v)
+        return out
+
+    return Strategy(draw, "lists")
+
+
+def just(value):
+    return Strategy(lambda rng: value, "just")
+
+
+def one_of(*strategies):
+    return Strategy(
+        lambda rng: strategies[int(rng.integers(0, len(strategies)))].draw(rng),
+        "one_of")
+
+
+def data():
+    return Strategy(lambda rng: DataObject(rng), "data")
+
+
+def composite(fn):
+    def builder(*args, **kw):
+        return Strategy(lambda rng: fn(DataObject(rng).draw, *args, **kw),
+                        f"composite({fn.__name__})")
+    return builder
+
+
+def _np_arrays(dtype, shape, *, elements=None, fill=None, unique=False):
+    if isinstance(shape, int):
+        shape = (shape,)
+
+    def draw(rng):
+        size = int(np.prod(shape)) if len(shape) else 1
+        if elements is None:
+            flat = rng.uniform(0, 1, size)
+        else:
+            flat = [elements.draw(rng) for _ in range(size)]
+        return np.asarray(flat, dtype=dtype).reshape(shape)
+
+    return Strategy(draw, f"arrays({np.dtype(dtype)}, {shape})")
+
+
+def _seed_for(fn):
+    return zlib.adler32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+
+def given(*given_args, **given_kwargs):
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # hypothesis maps positional strategies onto the RIGHTMOST params;
+        # remaining (leftmost) params stay visible so pytest injects fixtures
+        n_pos = len(given_args)
+        kw_names = set(given_kwargs)
+        remaining = [p for p in (params[:len(params) - n_pos]
+                                 if n_pos else params)
+                     if p.name not in kw_names]
+        pos_names = [p.name for p in params[len(params) - n_pos:]]
+        base_seed = _seed_for(fn)
+
+        def wrapper(*args, **kwargs):
+            # @settings may sit above OR below @given (hypothesis allows
+            # both): check the wrapper first, then the inner test
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            for i in range(n):
+                rng = np.random.default_rng((base_seed, i))
+                # drawn values go by NAME (rightmost params): fixtures
+                # arrive from pytest as kwargs, so positional passing would
+                # collide with them
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(pos_names, given_args)}
+                drawn.update({k: s.draw(rng)
+                              for k, s in given_kwargs.items()})
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _Assumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"hypothesis-stub example {i} failed with drawn "
+                        f"values {drawn!r}: {e!r}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return decorate
+
+
+settings.register_profile = lambda *a, **k: None
+settings.load_profile = lambda *a, **k: None
+
+
+class _Assumption(Exception):
+    pass
+
+
+def assume(condition):
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def install():
+    """Register the stub under the ``hypothesis`` module names (no-op when
+    the real library is importable)."""
+    try:
+        import hypothesis  # noqa: F401
+        return False
+    except ImportError:
+        pass
+
+    root = types.ModuleType("hypothesis")
+    root.__doc__ = __doc__
+    root.given = given
+    root.settings = settings
+    root.assume = assume
+    root.HealthCheck = HealthCheck
+    root.example = lambda *a, **k: (lambda f: f)
+    root.note = lambda *a, **k: None
+
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "just", "one_of", "data", "composite"):
+        setattr(strat, name, globals()[name])
+
+    extra = types.ModuleType("hypothesis.extra")
+    extra_np = types.ModuleType("hypothesis.extra.numpy")
+    extra_np.arrays = _np_arrays
+
+    root.strategies = strat
+    extra.numpy = extra_np
+    root.extra = extra
+
+    sys.modules["hypothesis"] = root
+    sys.modules["hypothesis.strategies"] = strat
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = extra_np
+    return True

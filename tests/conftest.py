@@ -3,6 +3,12 @@ needs it); model tests use explicit dtypes and are unaffected."""
 import numpy as np
 import pytest
 
+import _hypothesis_stub
+
+# Prefer the real hypothesis (requirements-dev.txt); fall back to the in-repo
+# deterministic stub so the suite still collects in hermetic environments.
+_hypothesis_stub.install()
+
 import repro.core  # noqa: F401  (enables x64 before any jax compute)
 from repro.core.eee import Policy, PowerModel
 from repro.topology.megafly import Megafly, small_topology

@@ -1,0 +1,235 @@
+"""Batched policy-sweep engine: equivalence with the serial simulator,
+static-structure grouping, and energy-accounting invariants."""
+import numpy as np
+import pytest
+
+from repro.core import simulator as S
+from repro.core import sweep as W
+from repro.core.eee import (PARAM_FIELDS, Policy, policy_params, static_key)
+from repro.traffic.generators import small_apps
+from repro.traffic.trace import Trace
+
+CHECK_FIELDS = ("makespan", "mean_latency", "max_latency", "n_messages",
+                "link_energy", "switch_energy", "node_energy", "total_energy",
+                "asleep_frac", "n_wake_transitions", "hits", "misses")
+
+
+def _mini_trace(topo, n=12, seed=3):
+    """A small Megafly trace with compute phases, cross-group traffic and
+    barriers — enough structure to exercise latency feedback."""
+    rng = np.random.default_rng(seed)
+    nodes = np.arange(n, dtype=np.int64) * (topo.n_nodes // n)
+    tr = Trace(nodes=nodes, name="mini")
+    for r in range(4):
+        tr.compute(rng.uniform(1e-5, 2e-3, n))
+        msgs = [[int(nodes[i]), int(nodes[(i + 1 + r) % n]),
+                 int(rng.integers(256, 1 << 16))] for i in range(n)]
+        tr.messages(msgs, barrier=(r % 2 == 1))
+    tr.compute(5e-3)
+    tr.messages([[int(nodes[0]), int(nodes[-1]), 4096]], barrier=True)
+    return tr
+
+
+GRID = {
+    "none": Policy(kind="none"),
+    "fixed/fw/10us": Policy(kind="fixed", t_pdt=1e-5, sleep_state="fast_wake"),
+    "fixed/ds/100us": Policy(kind="fixed", t_pdt=1e-4,
+                             sleep_state="deep_sleep"),
+    "fixed/ds/0": Policy(kind="fixed", t_pdt=0.0, sleep_state="deep_sleep"),
+    "pb/ds/1pct": Policy(kind="perfbound", bound=0.01,
+                         sleep_state="deep_sleep"),
+    "pb/fw/5pct": Policy(kind="perfbound", bound=0.05,
+                         sleep_state="fast_wake"),
+    "pb/ds/ring": Policy(kind="perfbound", bound=0.01, hist_mode="circular",
+                         ring_n=64, sleep_state="deep_sleep"),
+    "pb/ds/clear": Policy(kind="perfbound", bound=0.02,
+                          hist_mode="self_clear", hist_clear_n=50,
+                          sleep_state="deep_sleep"),
+    "pbc/ds/1pct": Policy(kind="perfbound_correct", bound=0.01,
+                          sleep_state="deep_sleep"),
+    "pbc/fw/2pct": Policy(kind="perfbound_correct", bound=0.02,
+                          sleep_state="fast_wake"),
+    # log-spaced bins and recency decay: the two configurations whose
+    # batched program takes traced-param branches the serial path doesn't
+    # (jnp bin_centers / per-lane hist_decay) — two lanes each so the
+    # batch axis is genuinely exercised
+    "pb/ds/log": Policy(kind="perfbound", bound=0.01, hist_log_bins=True,
+                        sleep_state="deep_sleep"),
+    "pb/fw/log8": Policy(kind="perfbound", bound=0.02, hist_log_bins=True,
+                         hist_log_min=1e-8, sleep_state="fast_wake"),
+    "pbc/ds/decay98": Policy(kind="perfbound_correct", bound=0.01,
+                             hist_decay=0.98, sleep_state="deep_sleep"),
+    "pbc/fw/decay9": Policy(kind="perfbound_correct", bound=0.02,
+                            hist_decay=0.9, sleep_state="fast_wake"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Policy factoring: static structure vs numeric parameter vector
+# ---------------------------------------------------------------------------
+
+
+def test_policy_params_covers_param_fields():
+    p = policy_params(Policy(kind="fixed", t_pdt=3e-5,
+                             sleep_state="fast_wake"))
+    assert set(p) == set(PARAM_FIELDS)
+    assert p["t_pdt"] == 3e-5
+    assert p["t_w"] == Policy(sleep_state="fast_wake").state.t_w
+    assert all(isinstance(v, float) for v in p.values())
+
+
+def test_static_key_ignores_numeric_fields():
+    a = Policy(kind="perfbound", bound=0.01, sleep_state="deep_sleep")
+    b = Policy(kind="perfbound", bound=0.05, sleep_state="fast_wake",
+               t_pdt=1.0, max_tpdt=1e-2, hist_bin_width=1e-5)
+    assert static_key(a) == static_key(b)
+    assert static_key(a) != static_key(Policy(kind="perfbound_correct"))
+    assert static_key(a) != static_key(
+        Policy(kind="perfbound", hist_mode="circular"))
+    # decay participates only as a flag
+    assert static_key(Policy(hist_decay=0.9)) == static_key(
+        Policy(hist_decay=0.5))
+    assert static_key(Policy(hist_decay=0.9)) != static_key(Policy())
+
+
+def test_grouping_batches_paper_grid():
+    """A paper-style 2x2x2 perfbound grid shares ONE static structure, so
+    the ≥8-policy sweep runs as a single batched scan per chunk."""
+    pols = {f"pb/{st}/{b}/{w:g}":
+            Policy(kind="perfbound", bound=b, sleep_state=st,
+                   hist_bin_width=w)
+            for st in ("fast_wake", "deep_sleep")
+            for b in (0.01, 0.02) for w in (1e-5, 1e-6)}
+    assert len(pols) == 8
+    groups = W.group_policies(pols)
+    assert len(groups) == 1 and len(groups[0]) == 8
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: sweep == serial replay, per policy, all four kinds
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def swept(topo, pm):
+    tr = _mini_trace(topo)
+    return tr, W.sweep_policies(tr, topo, GRID, pm)
+
+
+@pytest.mark.parametrize("name", list(GRID))
+def test_sweep_matches_serial(swept, topo, pm, name):
+    tr, results = swept
+    serial, _ = S.simulate_trace(tr, topo, GRID[name], pm)
+    got = results[name].as_dict()
+    want = serial.as_dict()
+    for k in CHECK_FIELDS:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-9, atol=1e-12,
+                                   err_msg=f"{name}.{k}")
+
+
+def test_sweep_max_group_split_matches(topo, pm):
+    """Splitting a group into sub-batches must not change results."""
+    tr = _mini_trace(topo, n=8, seed=5)
+    pols = {f"pb{b:g}": Policy(kind="perfbound", bound=b)
+            for b in (0.01, 0.02, 0.03, 0.05)}
+    full = W.sweep_policies(tr, topo, pols, pm)
+    split = W.sweep_policies(tr, topo, pols, pm, max_group=1)
+    for name in pols:
+        np.testing.assert_allclose(
+            [full[name].as_dict()[k] for k in CHECK_FIELDS],
+            [split[name].as_dict()[k] for k in CHECK_FIELDS], rtol=1e-12)
+
+
+def test_compare_policies_rides_sweep(topo, pm):
+    """The §4 protocol wrapper produces the same table as serial runs."""
+    tr = _mini_trace(topo, n=8, seed=7)
+    pols = {"fixed": Policy(kind="fixed", t_pdt=1e-4,
+                            sleep_state="deep_sleep"),
+            "pbc": Policy(kind="perfbound_correct", bound=0.01)}
+    out = S.compare_policies(tr, topo, pols, pm)
+    base, _ = S.simulate_trace(tr, topo, Policy(kind="none"), pm)
+    assert out["baseline"]["exec_overhead_pct"] == 0.0
+    np.testing.assert_allclose(out["baseline"]["makespan"], base.makespan,
+                               rtol=1e-12)
+    for name, pol in pols.items():
+        r, _ = S.simulate_trace(tr, topo, pol, pm)
+        np.testing.assert_allclose(out[name]["makespan"], r.makespan,
+                                   rtol=1e-9)
+        np.testing.assert_allclose(
+            out[name]["exec_overhead_pct"],
+            100 * (r.makespan / base.makespan - 1), rtol=1e-6, atol=1e-9)
+
+
+def test_sweep_handles_baseline_name_collision(topo, pm):
+    tr = _mini_trace(topo, n=4, seed=11)
+    out = S.compare_policies(
+        tr, topo, {"__baseline__": Policy(kind="fixed", t_pdt=1e-4)}, pm)
+    assert "baseline" in out and "__baseline__" in out
+    assert out["__baseline__"]["makespan"] >= out["baseline"]["makespan"]
+
+
+# ---------------------------------------------------------------------------
+# Energy-accounting invariants (issue satellite): every second of every
+# link's timeline lands at exactly one power level
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["none", "fixed/ds/100us", "fixed/ds/0",
+                                  "pb/ds/1pct", "pbc/ds/1pct"])
+def test_close_out_accounts_full_makespan(topo, pm, name):
+    """After close_out, time_wake + time_sleep ≈ makespan on every link
+    (overshoot only, bounded by the wake/sleep transition extensions)."""
+    pol = GRID[name]
+    tr = _mini_trace(topo)
+    res, _ = S.simulate_trace(tr, topo, pol, pm)
+
+    # replay the same chunks to get the final net state for close_out
+    net = S.init_net(topo.n_links, pol)
+    ready = np.zeros(topo.n_nodes)
+    for step in tr.steps:
+        if step.compute_nodes is not None and len(step.compute_nodes):
+            ready[step.compute_nodes] += step.compute_secs
+        if step.msgs is not None and len(step.msgs):
+            src, dst = step.msgs[:, 0], step.msgs[:, 1]
+            nbytes = step.msgs[:, 2].astype(np.float64)
+            t_inj = ready[src]
+            order = np.argsort(t_inj, kind="stable")
+            links, dirs, nhops = topo.routes(src[order], dst[order])
+            msgs = S._pad_msgs(links, dirs, nhops, t_inj[order],
+                               nbytes[order])
+            net, out = S.sim_chunk(net, msgs, pol, pm, topo.n_links)
+            np.maximum.at(ready, dst[order],
+                          np.asarray(out[0])[:len(src)])
+        if step.barrier:
+            ready[tr.nodes] = ready[tr.nodes].max()
+
+    t_end = float(ready[tr.nodes].max())
+    np.testing.assert_allclose(t_end, res.makespan, rtol=1e-12)
+    tw, ts = (np.asarray(x) for x in
+              S.close_out(net, t_end, pol, topo.n_links))
+    assert (tw >= -1e-12).all() and (ts >= -1e-12).all()
+    over = (tw + ts) - max(t_end, float(net["last_end"]
+                                        [:topo.n_links].max()))
+    assert (over > -1e-9).all(), "undershoot: unaccounted link time"
+    bound = np.asarray(net["n_wake"][:topo.n_links]) * \
+        (pol.state.t_w + pol.sync_overhead + pol.state.t_s) + 1e-9
+    assert (over <= bound).all(), "overshoot beyond transition extensions"
+
+
+def test_asleep_frac_in_unit_interval(swept):
+    _, results = swept
+    for name, res in results.items():
+        assert 0.0 <= res.asleep_frac <= 1.0, name
+        assert res.hits >= 0 and res.misses >= 0
+        assert res.n_wake_transitions == res.misses, name
+
+
+def test_none_policy_never_sleeps(swept, topo, pm):
+    _, results = swept
+    res = results["none"]
+    assert res.asleep_frac == 0.0
+    assert res.n_wake_transitions == 0
+    assert res.misses == 0
+    # link energy is exactly every port at wake power for the whole run
+    want = 2 * pm.port_power * topo.n_links * res.makespan
+    np.testing.assert_allclose(res.link_energy, want, rtol=1e-9)
