@@ -21,9 +21,21 @@ from repro.core.eee import Policy
 from repro.core.simulator import compare_policies
 
 
+def _grid(scale: str):
+    if scale == "paper":
+        return TPDT_GRID
+    if scale == "tiny":
+        return [0.0, 1e-5, 1e-3]
+    return TPDT_GRID[::2] + [1.0]
+
+
+def n_policies(scale: str = "small") -> int:
+    return len(SLEEP_STATES) * len(_grid(scale))
+
+
 def run(scale: str = "small"):
     topo = get_topo(scale)
-    grid = TPDT_GRID if scale == "paper" else TPDT_GRID[::2] + [1.0]
+    grid = _grid(scale)
     rows = []
     for name, trace in get_apps(scale, topo).items():
         pols = {f"{st}/t={t:g}": Policy(kind="fixed", t_pdt=t,

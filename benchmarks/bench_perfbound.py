@@ -23,10 +23,23 @@ from repro.core.simulator import compare_policies, simulate_trace
 from repro.core.sweep import group_policies
 
 
+def _grid_axes(scale: str):
+    if scale == "paper":
+        return BOUNDS, HIST_MODES
+    if scale == "tiny":
+        return [0.01], ["keep_all"]
+    return [0.01, 0.05], ["keep_all", "circular"]
+
+
+def n_policies(scale: str = "small") -> int:
+    bounds, modes = _grid_axes(scale)
+    # kinds x sleep states x bounds x modes + the 2 beyond-paper cells
+    return 2 * 2 * len(bounds) * len(modes) + 2
+
+
 def run(scale: str = "small"):
     topo = get_topo(scale)
-    bounds = BOUNDS if scale == "paper" else [0.01, 0.05]
-    modes = HIST_MODES if scale == "paper" else ["keep_all", "circular"]
+    bounds, modes = _grid_axes(scale)
     rows = []
     for i, (name, trace) in enumerate(get_apps(scale, topo).items()):
         pols = {}
@@ -58,10 +71,13 @@ def run(scale: str = "small"):
                 f"saved={r['energy_saved_pct']:.2f}% "
                 f"link_saved={r['link_energy_saved_pct']:.2f}% "
                 f"miss_rate={r['misses']/max(r['hits']+r['misses'],1):.3f}"))
-        if i == 0:
+        if i == 0 and scale != "tiny":
             # serial baseline over the SAME workload — the grid plus the
-            # always-on baseline compare_policies injects (its own compile
-            # cache keys per policy, so both sides pay real compile bills)
+            # always-on baseline compare_policies injects.  Serial runs are
+            # per-policy compiled plan replays (B=1), so this row isolates
+            # the value of the policy-batch axis; both sides share the
+            # cached TracePlan and pay real compile bills for their own
+            # program shapes.
             def _serial():
                 return [simulate_trace(trace, topo, p, PM)[0]
                         for p in [Policy(kind="none"), *pols.values()]]

@@ -1,6 +1,9 @@
 """Shared benchmark scaffolding.
 
 Every bench module exposes ``run(scale) -> list[Row]``.  ``scale``:
+  * ``tiny``   — minimal topology (12 nodes) + 2 shortest app traces; the
+    CI benchmark-smoke scale (seconds, still exercises the full compiled
+    replay pipeline).
   * ``small``  — reduced topology (80 nodes) + shortened app traces; the
     default for ``python -m benchmarks.run`` so the suite finishes on CPU
     in minutes.
@@ -9,6 +12,8 @@ Every bench module exposes ``run(scale) -> list[Row]``.  ``scale``:
     §Paper-validation were produced at this scale where noted.
 
 Rows print as ``name,us_per_call,derived`` CSV (one per measured quantity).
+Modules may additionally expose ``n_policies(scale) -> int`` so the driver
+can record grid sizes in the ``BENCH_<name>.json`` perf-trajectory files.
 """
 from __future__ import annotations
 
@@ -40,7 +45,12 @@ def timed(fn, *args, **kw):
 
 
 def get_topo(scale: str):
-    return paper_topology() if scale == "paper" else small_topology()
+    if scale == "paper":
+        return paper_topology()
+    if scale == "tiny":
+        return small_topology(n_groups=3, leaves=2, spines=2,
+                              nodes_per_leaf=2)
+    return small_topology()
 
 
 def get_apps(scale: str, topo):
@@ -50,6 +60,11 @@ def get_apps(scale: str, topo):
             "patmos": G.patmos(topo, n_nodes=64, compute_secs=1285.0),
             "mlwf": G.mlwf(topo, n_nodes=64, steps=25, layers=8),
             "alexnet": G.alexnet(topo, n_nodes=64, iters=10),
+        }
+    if scale == "tiny":
+        return {
+            "lammps": G.lammps(topo, n_nodes=8, iters=2),
+            "alexnet": G.alexnet(topo, n_nodes=8, iters=1),
         }
     return {
         "lammps": G.lammps(topo, n_nodes=16, iters=10),

@@ -21,6 +21,7 @@ from repro.core.eee import Policy, PowerModel
 from repro.core.sweep import group_policies, sweep_policies
 from repro.topology.megafly import paper_topology, small_topology
 from repro.traffic import generators as G
+from repro.traffic.plan import compile_plan
 
 scale = sys.argv[1] if len(sys.argv) > 1 else "small"
 if scale not in ("small", "paper"):
@@ -53,6 +54,12 @@ print("app,policy,makespan_s,mean_latency_s,link_energy_J,total_energy_J,"
       "asleep_frac,miss_rate", flush=True)
 max_group = 8 if scale == "paper" else None
 for app, tr in apps.items():
+    # compile the trace plan once up front — EVERY policy group below
+    # reuses it from the cache (routes + padding computed once per app)
+    t0 = time.time()
+    plan = compile_plan(tr, topo)
+    print(f"# {plan.describe()} compiled in {time.time() - t0:.1f}s",
+          flush=True)
     t0 = time.time()
     out = sweep_policies(tr, topo, grid, pm, max_group=max_group)
     for name, r in out.items():

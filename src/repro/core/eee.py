@@ -138,6 +138,23 @@ def static_key(policy: Policy) -> tuple:
         (policy.hist_decay < 1.0,)
 
 
+def canonical_proto(policy: Policy) -> Policy:
+    """Reset every numeric field to a fixed value, keeping only static
+    structure (plus the ``hist_decay < 1`` program flag).
+
+    The canonical proto is the compile-cache key of the plan executor and
+    the batched sweep: policies from the same static group — and chunk
+    splits of one group — hash equal, so they reuse ONE compiled program
+    and read their numerics lane-wise from a parameter vector.
+    """
+    return dataclasses.replace(
+        policy, sleep_state="deep_sleep", t_pdt=0.0, bound=0.01,
+        tpdt_init=10e-3, max_tpdt=10e-3, sync_overhead=5e-9,
+        hist_bin_width=10e-6, hist_log_min=1e-7, hist_log_max=10.0,
+        hist_clear_n=250,
+        hist_decay=0.5 if policy.hist_decay < 1.0 else 1.0)
+
+
 @dataclass(frozen=True)
 class PowerModel:
     """Table 5: system power inventory (W) + link bandwidth."""

@@ -1,0 +1,48 @@
+"""Lightweight JAX instrumentation: compile counting for benches + tests.
+
+``count_compiles()`` taps ``jax.monitoring`` for backend-compile events so
+the benchmark driver can report how many XLA programs a run built (the
+perf-trajectory JSON in ``benchmarks/run.py``) and the test-suite can
+assert that warm plan replays compile NOTHING.  Transfer elimination is
+pinned separately with ``jax.transfer_guard`` (see tests/test_plan.py).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax.monitoring
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_state = {"installed": False, "n": 0}
+
+
+def _on_event(event, duration, **_kw):
+    if event == _COMPILE_EVENT:
+        _state["n"] += 1
+
+
+def _install():
+    if not _state["installed"]:
+        jax.monitoring.register_event_duration_secs_listener(_on_event)
+        _state["installed"] = True
+
+
+class CompileCount:
+    def __init__(self, start):
+        self._start = start
+
+    @property
+    def count(self) -> int:
+        return _state["n"] - self._start
+
+
+@contextlib.contextmanager
+def count_compiles():
+    """Context manager yielding a live backend-compile counter:
+
+        with count_compiles() as cc:
+            ...
+        print(cc.count)
+    """
+    _install()
+    yield CompileCount(_state["n"])

@@ -1,0 +1,202 @@
+"""Compiled trace replay: execute a TracePlan as ``lax.scan`` over steps.
+
+Stage 2 of the plan/execute split (DESIGN.md §2).  The executor carries
+(``net`` EEE/predictor state, per-node ``ready`` clocks, latency
+accumulators) entirely on device across the whole trace:
+
+  * injection-time ordering runs as a **stable ``jnp.argsort`` inside the
+    scanned step** (per batch lane — each policy's latency feedback gives
+    it a different replay order), replacing the per-step host sorts;
+  * delivery maxima update ``ready`` via **scatter-max** (invalid slots
+    carry -inf, so padding never races);
+  * compute advances and barriers are **scan-step branches**: a dense
+    per-step clock delta plus a masked participant-max select;
+  * message-less steps skip the message machinery through a ``lax.cond``
+    on the plan's per-step ``has_msgs`` flag.
+
+The serial engine is the B=1 case of the batched one: ``policies`` lanes
+share a canonical static proto (``eee.canonical_proto``) and read their
+numerics lane-wise from a stacked parameter vector, so one compiled
+program serves every policy of a static group — and every B — per segment
+shape.  Between segments only jitted-call dispatch happens on host; the
+carry never leaves the device (``tests/test_plan.py`` pins this with a
+``jax.transfer_guard``).
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import simulator as S
+from repro.core.eee import (PARAM_FIELDS, Policy, PowerModel,
+                            canonical_proto, policy_params)
+
+
+def stack_params(pols) -> dict:
+    """Stack each policy's numeric parameter vector into (B,) f64 arrays."""
+    cols = [policy_params(p) for p in pols]
+    return {f: jnp.asarray([c[f] for c in cols], jnp.float64)
+            for f in PARAM_FIELDS}
+
+
+# ---------------------------------------------------------------------------
+# Compiled per-segment runner
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _segment_runner(proto: Policy, pm: PowerModel, n_links: int, cap: int,
+                    collect_events: bool):
+    """One jitted scan over a segment's steps; retraces per (S, B) shape."""
+
+    def _lane(net, p, ready, lat_sum, lat_max, mx):
+        """Message phase of one step for ONE policy lane."""
+        src, dst, nbytes, links, dirs, nhops, valid = mx
+        t_inj = ready[src]
+        # stable sort, padding keyed to +inf: the valid prefix orders
+        # exactly like the reference engine's host np.argsort
+        order = jnp.argsort(jnp.where(valid, t_inj, jnp.inf), stable=True)
+        dst_s = dst[order]
+        valid_s = valid[order]
+        msgs = (links[order], dirs[order], nhops[order], t_inj[order],
+                nbytes[order], valid_s)
+
+        def msg_step(net, m):
+            net, (d, lat, ev) = S._message_step(net, m, proto, pm, n_links,
+                                                params=p)
+            return net, ((d, lat, ev) if collect_events else (d, lat))
+
+        net, out = lax.scan(msg_step, net, msgs)
+        delivery, lat = out[0], out[1]
+        ready = ready.at[dst_s].max(jnp.where(valid_s, delivery, -jnp.inf))
+        lat_sum = lat_sum + lat.sum()
+        lat_max = jnp.maximum(lat_max, lat.max())
+        if collect_events:
+            return net, ready, lat_sum, lat_max, out[2]
+        return net, ready, lat_sum, lat_max
+
+    @partial(jax.jit, donate_argnums=(0, 2, 3, 4))
+    def run(nets, params, ready, lat_sum, lat_max, part_mask, xs):
+        B = ready.shape[0]
+
+        def step(carry, x):
+            nets, ready, lat_sum, lat_max = carry
+            ready = ready + x["delta"][None]
+            ev = None
+            if cap:
+                mx = (x["src"], x["dst"], x["nbytes"], x["links"],
+                      x["dirs"], x["nhops"], x["valid"])
+
+                def do(ops):
+                    nets, ready, ls, lm = ops
+                    return jax.vmap(_lane, in_axes=(0, 0, 0, 0, 0, None))(
+                        nets, params, ready, ls, lm, mx)
+
+                def skip(ops):
+                    if not collect_events:
+                        return ops
+                    H = x["links"].shape[-1]
+                    return ops + ((
+                        jnp.full((B, cap, H), n_links, jnp.int32),
+                        jnp.zeros((B, cap, H), jnp.float64),
+                        jnp.zeros((B, cap, H), jnp.float64),
+                        jnp.zeros((B, cap, H), bool)),)
+
+                out = lax.cond(x["has_msgs"], do, skip,
+                               (nets, ready, lat_sum, lat_max))
+                if collect_events:
+                    nets, ready, lat_sum, lat_max, ev = out
+                else:
+                    nets, ready, lat_sum, lat_max = out
+            rmax = jnp.max(jnp.where(part_mask, ready, -jnp.inf), axis=-1)
+            ready = jnp.where(x["barrier"] & part_mask, rmax[:, None], ready)
+            return (nets, ready, lat_sum, lat_max), ev
+
+        return lax.scan(step, (nets, ready, lat_sum, lat_max), xs)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _participant_max(mask, ready):
+    """Per-lane makespan: max ``ready`` over participants.  Jitted so the
+    -inf fill is a compile-time constant (keeps warm replays transfer-free)."""
+    return jnp.max(jnp.where(mask, ready, -jnp.inf), axis=-1)
+
+
+def init_lanes(pols, plan):
+    """Lane setup (the only host->device traffic of a replay): canonical
+    proto, stacked params, and the initial scan carry — batched net state,
+    zeroed per-node ``ready`` clocks, zeroed latency accumulators."""
+    proto = canonical_proto(pols[0])
+    params = stack_params(pols)
+    nets = jax.vmap(
+        lambda p: S.init_net(plan.n_links, proto, params=p))(params)
+    B = next(iter(params.values())).shape[0]
+    carry = (nets, jnp.zeros((B, plan.n_nodes), jnp.float64),
+             jnp.zeros((B,), jnp.float64), jnp.zeros((B,), jnp.float64))
+    return proto, params, carry
+
+
+def run_segments(plan, proto, params, pm, carry, collect_events=False):
+    """Execute every plan segment, carrying all state on device.
+
+    ``carry`` is ``init_lanes``'s (nets, ready, lat_sum, lat_max).  Host
+    work per segment is ONE jitted-call dispatch — no transfers, no sorts,
+    no padding (pinned by tests/test_plan.py under a transfer guard).
+    Returns device values ``(nets, t_end (B,), lat_sum (B,), lat_max (B,),
+    seg_events)``.
+    """
+    seg_events = [] if collect_events else None
+    for seg in plan.segments:
+        run = _segment_runner(proto, pm, plan.n_links, seg.cap,
+                              collect_events)
+        carry, evs = run(carry[0], params, carry[1], carry[2], carry[3],
+                         plan.part_mask, seg.xs)
+        if collect_events and seg.cap:
+            seg_events.append((seg, evs))
+    nets, ready, lat_sum, lat_max = carry
+    if plan.has_participants:
+        t_end = _participant_max(plan.part_mask, ready)
+    else:
+        t_end = lat_sum * 0.0
+    return nets, t_end, lat_sum, lat_max, seg_events
+
+
+def replay_plan(plan, pols, pm, collect_events=False):
+    """One-stop compiled replay: init lanes, run segments, read back.
+
+    Returns ``(nets, t_end, lat_sum, lat_max, seg_events)`` with the
+    scalar accumulators as host numpy (B,) arrays.
+    """
+    proto, params, carry = init_lanes(pols, plan)
+    nets, t_end, lat_sum, lat_max, seg_events = run_segments(
+        plan, proto, params, pm, carry, collect_events)
+    return (nets, np.asarray(t_end), np.asarray(lat_sum),
+            np.asarray(lat_max), seg_events)
+
+
+def events_to_host(plan, seg_events):
+    """Lower collected events to the classic per-message-step host list
+    ``[(link, t_start, t_end), ...]`` (active hops only, replay order).
+
+    Only the B=1 (serial) path collects events; lane 0 is extracted.
+    """
+    out = []
+    for seg, evs in seg_events:
+        lp, ts, te, act = (np.asarray(x) for x in evs)   # (S, B, cap, H)
+        for i in range(seg.n_steps):
+            if not seg.host_has_msgs[i]:
+                continue
+            m = act[i, 0]
+            out.append((lp[i, 0][m], ts[i, 0][m], te[i, 0][m]))
+    return out

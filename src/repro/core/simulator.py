@@ -14,6 +14,15 @@ Execution-time semantics come from the phase-structured replay
 (`simulate_trace`): per-node ready times advance across trace steps with
 message-delivery dependencies — makespan overhead, packet latency, and energy
 are measured exactly as in §4 of the paper.
+
+Replay runs as a compiled two-stage pipeline (DESIGN.md §2): the trace is
+compiled ONCE per topology into a device-resident ``TracePlan``
+(``repro.traffic.plan``) and executed as ``lax.scan`` over plan steps
+(``repro.core.replay``) with the per-node ``ready`` clocks carried on
+device.  ``simulate_trace`` is a thin wrapper over that executor (the B=1
+case of the batched sweep); the original host step-loop survives as
+``simulate_trace_reference`` — the semantic oracle the equivalence suite
+(``tests/test_plan.py``) pins the compiled path against.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ from jax import lax
 
 from repro.core import perfbound as pb
 from repro.core.eee import Policy, PowerModel
+from repro.traffic.plan import compile_plan, pad_message_table
 
 MAX_HOPS = 5
 
@@ -239,32 +249,49 @@ def summarize(net, t_end, busy_node_secs, lat_sum, lat_max, n_msgs,
 # ---------------------------------------------------------------------------
 
 
-def _bucket_cap(M, bucket_min=64):
-    """Power-of-two chunk capacity shared by the serial and batched padders
-    (identical bucketing keeps their recompilation behaviour aligned)."""
-    return max(bucket_min, 1 << (max(M - 1, 1)).bit_length())
-
-
 def _pad_msgs(links, dirs, nhops, t_inj, nbytes, bucket_min=64):
-    M = len(nhops)
-    cap = _bucket_cap(M, bucket_min)
-    pad = cap - M
-
-    def p(a, fill=0):
-        return np.concatenate([a, np.full((pad,) + a.shape[1:], fill,
-                                          a.dtype)])
-    valid = np.concatenate([np.ones(M, bool), np.zeros(pad, bool)])
-    return (jnp.asarray(p(links, -1)), jnp.asarray(p(dirs)),
-            jnp.asarray(p(nhops)), jnp.asarray(p(t_inj.astype(np.float64))),
-            jnp.asarray(p(nbytes.astype(np.float64))), jnp.asarray(valid))
+    """Serial front-end of the shared padder: host arrays in, device
+    ``(links, dirs, nhops, t_inj, nbytes, valid)`` tuple out."""
+    out = pad_message_table(links, dirs, nhops, t_inj, nbytes,
+                            bucket_min=bucket_min)
+    return tuple(jnp.asarray(a) for a in out)
 
 
 def simulate_trace(trace, topo, policy: Policy, pm: PowerModel | None = None,
                    collect_events=False):
     """Replay a Trace (see repro.traffic.trace) under a policy.
 
+    Runs on the compiled plan pipeline: ``repro.traffic.plan.compile_plan``
+    (cached per (trace, topo)) + the ``repro.core.replay`` scan executor,
+    as the B=1 case of the batched sweep engine.  Results match the host
+    step-loop reference (``simulate_trace_reference``) to float64
+    tolerance — enforced by ``tests/test_plan.py``.
+
     Returns (SimResult, events) — events is a list of per-step host arrays
     (link, t_start, t_end) when collect_events, else None.
+    """
+    from repro.core import replay  # late: replay imports us
+    pm = pm or PowerModel()
+    plan = compile_plan(trace, topo)
+    nets, t_end, lat_sum, lat_max, seg_events = replay.replay_plan(
+        plan, [policy], pm, collect_events)
+    net0 = jax.tree.map(lambda x: x[0], nets)
+    res = summarize(net0, float(t_end[0]), plan.busy, float(lat_sum[0]),
+                    float(lat_max[0]), plan.n_msgs, policy, pm, topo)
+    events = (replay.events_to_host(plan, seg_events) if collect_events
+              else None)
+    return res, events
+
+
+def simulate_trace_reference(trace, topo, policy: Policy,
+                             pm: PowerModel | None = None,
+                             collect_events=False):
+    """Host step-loop replay — the semantic oracle for the compiled path.
+
+    One ``sim_chunk`` dispatch per trace step with host-side injection
+    sorting, route lookup and ``ready``-clock bookkeeping.  Slower than
+    ``simulate_trace`` (per-step host<->device ping-pong) but with no plan
+    compilation: the equivalence suite replays both and compares.
     """
     pm = pm or PowerModel()
     net = init_net(topo.n_links, policy)

@@ -1,4 +1,4 @@
-"""Batched multi-policy sweep engine: B policies per trace chunk in ONE scan.
+"""Batched multi-policy sweep engine: B policies per trace replay, compiled.
 
 The paper's whole evaluation protocol (§4) is a grid sweep — PerfBound vs
 PerfBoundCorrect across degradation bounds x histogram modes x sleep states.
@@ -10,11 +10,17 @@ a leading batch axis and evaluated side by side:
 
   * the network state (``simulator.init_net``) gains a leading policy axis
     via ``jax.vmap`` — including the PerfBound predictor state;
-  * each trace chunk runs as a single compiled ``lax.scan`` whose step is
-    the vmapped ``simulator._message_step`` reading per-lane parameters;
-  * message injection order is policy-dependent (latency feedback shifts
-    per-node clocks), so each lane carries its own host-side sort of the
-    chunk — the device pass stays shared.
+  * the trace is compiled ONCE per topology into a device-resident
+    :class:`~repro.traffic.plan.TracePlan` (``repro.traffic.plan``) —
+    routes, message padding and phase lowering are shared by EVERY group
+    of the sweep through the plan cache, instead of being recomputed per
+    group;
+  * each plan segment runs as a single compiled ``lax.scan`` over steps
+    (``repro.core.replay``) whose message phase is the vmapped
+    ``simulator._message_step`` reading per-lane parameters; injection
+    order is policy-dependent (latency feedback shifts per-node clocks),
+    so each lane sorts its own lane's clocks with a stable ``jnp.argsort``
+    INSIDE the scanned step — nothing returns to host between steps.
 
 ``sweep_policies`` is the public entry point; ``compare_policies`` in
 ``repro.core.simulator`` is built on top of it.  Sleep states lower to
@@ -24,21 +30,17 @@ same predictor batch together; a typical paper grid (2 kinds x 3 bounds x
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import lru_cache, partial
-
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
 
+from repro.core import replay
 from repro.core import simulator as S
-from repro.core.eee import (PARAM_FIELDS, Policy, PowerModel, policy_params,
-                            static_key)
+from repro.core.eee import PowerModel, static_key
+from repro.core.replay import stack_params  # noqa: F401 (public re-export)
+from repro.traffic.plan import compile_plan
 
 
 # ---------------------------------------------------------------------------
-# Grouping + parameter stacking
+# Grouping
 # ---------------------------------------------------------------------------
 
 
@@ -54,130 +56,21 @@ def group_policies(policies: dict) -> list:
     return list(groups.values())
 
 
-def stack_params(pols: list) -> dict:
-    """Stack each policy's numeric parameter vector into (B,) f64 arrays."""
-    cols = [policy_params(p) for p in pols]
-    return {f: jnp.asarray([c[f] for c in cols], jnp.float64)
-            for f in PARAM_FIELDS}
-
-
 # ---------------------------------------------------------------------------
-# Compiled batched chunk
-# ---------------------------------------------------------------------------
-
-
-def _canonical_proto(policy: Policy) -> Policy:
-    """Reset every numeric field to a fixed value, keeping only static
-    structure (plus the ``hist_decay < 1`` program flag).  Protos from the
-    same static group then hash equal, so ``max_group`` chunk splits and
-    sibling groups reuse one compiled program instead of recompiling per
-    chunk prototype."""
-    return dataclasses.replace(
-        policy, sleep_state="deep_sleep", t_pdt=0.0, bound=0.01,
-        tpdt_init=10e-3, max_tpdt=10e-3, sync_overhead=5e-9,
-        hist_bin_width=10e-6, hist_log_min=1e-7, hist_log_max=10.0,
-        hist_clear_n=250,
-        hist_decay=0.5 if policy.hist_decay < 1.0 else 1.0)
-
-
-@lru_cache(maxsize=None)
-def _compiled_sweep_chunk(proto: Policy, pm: PowerModel, n_links: int):
-    """One jitted scan evaluating all B lanes of a policy group per chunk.
-
-    ``proto`` must be canonical (``_canonical_proto``): it supplies only
-    static structure; every numeric value the compiled code reads comes
-    lane-wise from ``params``.
-    """
-    def lane(net, p, m):
-        net, (d, lat, _ev) = S._message_step(net, m, proto, pm, n_links,
-                                             params=p)
-        return net, (d, lat)
-
-    @partial(jax.jit, donate_argnums=(0,))
-    def run(nets, params, msgs):
-        def step(nets, m):
-            return jax.vmap(lane, in_axes=(0, 0, 0))(nets, params, m)
-        return lax.scan(step, nets, msgs)
-
-    return run
-
-
-def _pad_msgs_batch(links, dirs, nhops, t_inj, nbytes, bucket_min=64):
-    """Per-lane-ordered message arrays (B, M, ...) -> scan-ready tuples
-    (cap, B, ...) padded to the same power-of-two buckets as the serial
-    ``simulator._pad_msgs`` (keeps recompilation behaviour aligned)."""
-    B, M = nhops.shape
-    cap = S._bucket_cap(M, bucket_min)
-    pad = cap - M
-
-    def p(a, fill=0):
-        return np.concatenate(
-            [a, np.full((B, pad) + a.shape[2:], fill, a.dtype)], axis=1)
-
-    valid = np.concatenate([np.ones((B, M), bool), np.zeros((B, pad), bool)],
-                           axis=1)
-    out = (p(links, -1), p(dirs), p(nhops), p(t_inj.astype(np.float64)),
-           p(nbytes.astype(np.float64)), valid)
-    return tuple(jnp.asarray(np.swapaxes(a, 0, 1)) for a in out)
-
-
-# ---------------------------------------------------------------------------
-# Batched trace replay
+# Batched trace replay (plan executor wrapper)
 # ---------------------------------------------------------------------------
 
 
 def _sweep_group(trace, topo, names, pols, pm):
     """Replay ``trace`` once for a static-structure group of B policies."""
-    proto = _canonical_proto(pols[0])
-    B = len(pols)
-    n_links = topo.n_links
-    params = stack_params(pols)
-    nets = jax.vmap(lambda p: S.init_net(n_links, proto, params=p))(params)
-    run = _compiled_sweep_chunk(proto, pm, n_links)
-
-    ready = np.zeros((B, topo.n_nodes), np.float64)
-    busy = 0.0
-    lat_sum = np.zeros(B)
-    lat_max = np.zeros(B)
-    n_msgs = 0
-
-    for step in trace.steps:
-        if step.compute_nodes is not None and len(step.compute_nodes):
-            ready[:, step.compute_nodes] += step.compute_secs[None, :]
-            busy += float(step.compute_secs.sum())
-        if step.msgs is not None and len(step.msgs):
-            src = step.msgs[:, 0]
-            dst = step.msgs[:, 1]
-            nbytes = step.msgs[:, 2].astype(np.float64)
-            links, dirs, nhops = topo.routes(src, dst)
-            # per-lane injection order: each policy's latency feedback gives
-            # it a different per-node clock, hence a different replay order
-            t_inj = ready[:, src]                           # (B, M)
-            order = np.argsort(t_inj, axis=1, kind="stable")
-            dst_b = dst[order]
-            msgs = _pad_msgs_batch(
-                links[order], dirs[order], nhops[order],
-                np.take_along_axis(t_inj, order, axis=1), nbytes[order])
-            nets, (delivery, lat) = run(nets, params, msgs)
-            M = len(src)
-            delivery = np.asarray(delivery).T[:, :M]        # (B, M)
-            lat_np = np.asarray(lat).T[:, :M]
-            np.maximum.at(ready, (np.arange(B)[:, None], dst_b), delivery)
-            lat_sum += lat_np.sum(1)
-            lat_max = np.maximum(lat_max, lat_np.max(1, initial=0.0))
-            n_msgs += M
-        if step.barrier:
-            nodes = trace.nodes
-            ready[:, nodes] = ready[:, nodes].max(axis=1, keepdims=True)
-
-    t_end = (ready[:, trace.nodes].max(1) if len(trace.nodes)
-             else np.zeros(B))
+    plan = compile_plan(trace, topo)
+    nets, t_end, lat_sum, lat_max, _ = replay.replay_plan(plan, pols, pm)
     out = {}
     for b, name in enumerate(names):
         net_b = jax.tree.map(lambda x: x[b], nets)
-        out[name] = S.summarize(net_b, float(t_end[b]), busy,
+        out[name] = S.summarize(net_b, float(t_end[b]), plan.busy,
                                 float(lat_sum[b]), float(lat_max[b]),
-                                n_msgs, pols[b], pm, topo)
+                                plan.n_msgs, pols[b], pm, topo)
     return out
 
 
@@ -187,9 +80,11 @@ def sweep_policies(trace, topo, policies: dict, pm: PowerModel | None = None,
 
     Policies are grouped by static structure (``eee.static_key``); each
     group replays the trace ONCE with a leading policy axis of width B and
-    a single compiled scan per chunk.  Returns {name: SimResult} in the
-    caller's insertion order — results match serial
-    ``simulator.simulate_trace`` per policy to float64 tolerance.
+    a single compiled scan per plan segment.  All groups share one cached
+    TracePlan, so routes and padding are computed once per (trace, topo) —
+    not once per group.  Returns {name: SimResult} in the caller's
+    insertion order — results match serial ``simulator.simulate_trace``
+    (and the step-loop reference engine) per policy to float64 tolerance.
 
     ``max_group`` caps the batch width (splits big groups), bounding device
     memory at paper scale: predictor state is O(B * n_links * hist_bins).

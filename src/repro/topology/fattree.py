@@ -27,9 +27,11 @@ from __future__ import annotations
 import dataclasses
 import numpy as np
 
+from repro.topology.base import RoutedTopology
+
 
 @dataclasses.dataclass(frozen=True)
-class FatTree:
+class FatTree(RoutedTopology):
     k: int = 8
 
     def __post_init__(self):

@@ -14,17 +14,20 @@ intra-group packet is ``dst % spines``; for inter-group packets the spine is
 forced by the unique global link to the destination group.  Hop counts
 (links traversed): same-leaf 2, intra-group 4, inter-group 5.
 
-Everything here is host-side numpy — path expansion happens once per trace
-step and feeds the jitted simulator as plain arrays.
+Everything here is host-side numpy — the trace-plan compiler
+(``repro.traffic.plan``) expands paths ONCE per (trace, topology) through
+``routes_cached`` and feeds the jitted replay as plain arrays.
 """
 from __future__ import annotations
 
 import dataclasses
 import numpy as np
 
+from repro.topology.base import RoutedTopology
+
 
 @dataclasses.dataclass(frozen=True)
-class Megafly:
+class Megafly(RoutedTopology):
     n_groups: int = 65
     leaves_per_group: int = 8
     spines_per_group: int = 8

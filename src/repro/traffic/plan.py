@@ -1,0 +1,347 @@
+"""Trace -> TracePlan compiler: device-resident replay plans (DESIGN.md §2).
+
+Replaying a :class:`~repro.traffic.trace.Trace` used to be a host Python
+loop: every step re-derived routes, argsorted injection times in numpy,
+re-padded messages, and bounced ``ready``-clock state between host and
+device.  This module compiles a (trace, topology) pair ONCE into a
+:class:`TracePlan` whose arrays live on device, so the executor
+(``repro.core.replay``) can run the whole trace as a few ``lax.scan`` calls
+with zero per-step host work:
+
+  * **routes**: one batched ``topo.routes_cached`` lookup for ALL messages
+    of the trace (the topology-level route LRU serves whole-trace repeats
+    — replanned or identically rebuilt traces, fresh equal topologies);
+  * **message tables**: per-step (src, dst, bytes, links, dirs, n_hops)
+    padded into a small set of shared power-of-two bucket shapes — the
+    same bucketing both engines always used, now in one place;
+  * **compute / barrier phases**: lowered to dense per-step arrays
+    (a (n_nodes,) clock delta + a barrier flag) that become scan-step
+    branches in the executor;
+  * **segments**: contiguous runs of steps sharing a message bucket are
+    stacked into (S, cap, ...) arrays — one compiled scan per segment
+    shape.  Step counts are padded to power-of-two buckets as well, so
+    compile count is bounded by distinct (cap, S-bucket) pairs, not by
+    trace length.
+
+Plans are cached per (trace, topology): every policy group of a sweep —
+and every warm rerun — reuses the same device arrays instead of recomputing
+routes and padding per group.  The cache keys on trace identity plus a
+cheap structural fingerprint; mutating a trace after planning (appending
+steps via the builder API) is detected and triggers recompilation.
+"""
+from __future__ import annotations
+
+import weakref
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+BUCKET_MIN = 64        # smallest message-slot bucket (shared by all engines)
+STEP_BUCKET_MIN = 4    # smallest per-segment step-count bucket
+MAX_STEP_PAD = 32      # cap on shared-bucket padding of a short segment
+
+
+def bucket_cap(M: int, bucket_min: int = BUCKET_MIN) -> int:
+    """Power-of-two capacity bucket for M messages (identical bucketing
+    across the serial, batched, and plan engines keeps their recompilation
+    behaviour aligned)."""
+    return max(bucket_min, 1 << (max(M - 1, 1)).bit_length())
+
+
+def step_bucket(S: int, bucket_min: int = STEP_BUCKET_MIN) -> int:
+    return max(bucket_min, 1 << (max(S - 1, 1)).bit_length())
+
+
+def _pad_axis(a: np.ndarray, cap: int, axis: int, fill=0) -> np.ndarray:
+    pad = cap - a.shape[axis]
+    if pad <= 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return np.pad(a, widths, constant_values=fill)
+
+
+def pad_message_table(links, dirs, nhops, t_inj, nbytes, *, axis=0,
+                      bucket_min: int = BUCKET_MIN):
+    """THE shared message-padding helper (serial + batched + plan engines).
+
+    Pads every per-message array along ``axis`` to the power-of-two bucket
+    of its current length and returns host numpy
+    ``(links, dirs, nhops, t_inj, nbytes, valid)`` — links filled with -1,
+    numerics with 0, ``valid`` marking real entries.
+    """
+    M = nhops.shape[axis]
+    cap = bucket_cap(M, bucket_min)
+    valid_shape = list(nhops.shape)
+    valid_shape[axis] = cap
+    valid = np.zeros(valid_shape, bool)
+    np.moveaxis(valid, axis, 0)[:M] = True
+    return (_pad_axis(links, cap, axis, -1), _pad_axis(dirs, cap, axis),
+            _pad_axis(nhops, cap, axis),
+            _pad_axis(t_inj.astype(np.float64), cap, axis),
+            _pad_axis(nbytes.astype(np.float64), cap, axis), valid)
+
+
+# ---------------------------------------------------------------------------
+# Plan data model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _HostStep:
+    """One lowered replay step (host-side intermediate): an optional clock
+    advance, an optional message table, and an optional barrier — applied
+    in that order (DESIGN.md §3)."""
+    compute: Optional[tuple] = None      # (nodes (K,), secs (K,))
+    msgs: Optional[np.ndarray] = None    # (M, 3) [src, dst, bytes]
+    barrier: bool = False
+
+
+@dataclass
+class PlanSegment:
+    """A contiguous run of plan steps sharing one message bucket, stacked
+    into device arrays with leading dim S (step-count, power-of-two
+    padded).  ``xs`` feeds the executor's ``lax.scan`` directly."""
+    cap: int                             # message slots per step (0: none)
+    n_steps: int                         # real steps before S-padding
+    xs: dict = field(repr=False)         # device arrays, leading dim S_pad
+    host_has_msgs: np.ndarray = field(default=None, repr=False)  # (S_pad,)
+
+
+@dataclass
+class TracePlan:
+    """A compiled, device-resident replay program for one (trace, topo)."""
+    n_nodes: int
+    n_links: int
+    max_hops: int
+    part_mask: jnp.ndarray               # (n_nodes,) bool — participants
+    has_participants: bool
+    busy: float                          # total compute seconds (node energy)
+    n_msgs: int
+    n_message_steps: int
+    segments: List[PlanSegment]
+    name: str = ""
+    bucket_min: int = BUCKET_MIN
+
+    @property
+    def n_steps(self) -> int:
+        return sum(s.n_steps for s in self.segments)
+
+    def describe(self) -> str:
+        caps = [f"{s.cap}x{s.n_steps}" for s in self.segments]
+        return (f"TracePlan({self.name or 'trace'}: {self.n_msgs} msgs, "
+                f"{self.n_steps} steps, segments [{', '.join(caps)}])")
+
+
+# ---------------------------------------------------------------------------
+# Lowering: Trace steps -> _HostSteps (phase fusion)
+# ---------------------------------------------------------------------------
+
+
+def _lower_steps(trace) -> List[_HostStep]:
+    """Fuse the trace's phase structure into plan steps.
+
+    A compute-only step fuses into the FOLLOWING message step (the plan
+    step applies compute -> msgs -> barrier, exactly the replay order of
+    the two originals); a trailing barrier-only step folds into the
+    preceding plan step.  Fusion never merges two compute phases into one
+    floating-point add, so clock arithmetic stays bit-identical to the
+    step-loop reference engine.
+    """
+    out: List[_HostStep] = []
+    pending: Optional[tuple] = None      # one unconsumed compute phase
+
+    def flush():
+        nonlocal pending
+        if pending is not None:
+            out.append(_HostStep(compute=pending))
+            pending = None
+
+    for st in trace.steps:
+        has_c = st.compute_nodes is not None and len(st.compute_nodes) > 0
+        has_m = st.msgs is not None and len(st.msgs) > 0
+        if has_c and not has_m and not st.barrier:
+            flush()
+            pending = (st.compute_nodes, st.compute_secs)
+            continue
+        if not has_m and not st.barrier:
+            continue                     # fully empty step: no-op
+        if has_c:
+            flush()
+            comp = (st.compute_nodes, st.compute_secs)
+        else:
+            comp, pending = pending, None
+        if not has_m and st.barrier and comp is None and out \
+                and not out[-1].barrier:
+            out[-1].barrier = True       # retrofit: phases then barrier
+            continue
+        out.append(_HostStep(compute=comp,
+                             msgs=st.msgs if has_m else None,
+                             barrier=st.barrier))
+    flush()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compilation
+# ---------------------------------------------------------------------------
+
+
+def _stack_segment(steps: List[_HostStep], cap: int, n_nodes: int,
+                   routed: dict, H: int, S_pad: int) -> PlanSegment:
+    S = len(steps)
+    delta = np.zeros((S_pad, n_nodes), np.float64)
+    barrier = np.zeros((S_pad,), bool)
+    has_msgs = np.zeros((S_pad,), bool)
+    xs = {}
+    if cap:
+        src = np.zeros((S_pad, cap), np.int32)
+        dst = np.zeros((S_pad, cap), np.int32)
+        nbytes = np.zeros((S_pad, cap), np.float64)
+        links = np.full((S_pad, cap, H), -1, np.int32)
+        dirs = np.zeros((S_pad, cap, H), np.int32)
+        nhops = np.zeros((S_pad, cap), np.int32)
+        valid = np.zeros((S_pad, cap), bool)
+    for i, ps in enumerate(steps):
+        if ps.compute is not None:
+            nodes, secs = ps.compute
+            # assignment (not add.at): matches the reference engine's
+            # buffered fancy-index `ready[nodes] += secs`
+            delta[i][np.asarray(nodes)] = np.asarray(secs, np.float64)
+        barrier[i] = ps.barrier
+        if ps.msgs is not None:
+            M = len(ps.msgs)
+            has_msgs[i] = True
+            src[i, :M] = ps.msgs[:, 0]
+            dst[i, :M] = ps.msgs[:, 1]
+            nbytes[i, :M] = ps.msgs[:, 2].astype(np.float64)
+            l, d, nh = routed[id(ps)]
+            links[i, :M] = l
+            dirs[i, :M] = d
+            nhops[i, :M] = nh
+            valid[i, :M] = True
+    xs["delta"] = jnp.asarray(delta)
+    xs["barrier"] = jnp.asarray(barrier)
+    if cap:
+        xs.update(
+            has_msgs=jnp.asarray(has_msgs), src=jnp.asarray(src),
+            dst=jnp.asarray(dst), nbytes=jnp.asarray(nbytes),
+            links=jnp.asarray(links), dirs=jnp.asarray(dirs),
+            nhops=jnp.asarray(nhops), valid=jnp.asarray(valid))
+    return PlanSegment(cap=cap, n_steps=S, xs=xs, host_has_msgs=has_msgs)
+
+
+def _compile(trace, topo, bucket_min: int) -> TracePlan:
+    steps = _lower_steps(trace)
+    H = topo.max_hops
+
+    # ---- one batched route lookup for the whole trace -------------------
+    msg_steps = [ps for ps in steps if ps.msgs is not None]
+    routed: dict = {}
+    if msg_steps:
+        all_src = np.concatenate([ps.msgs[:, 0] for ps in msg_steps])
+        all_dst = np.concatenate([ps.msgs[:, 1] for ps in msg_steps])
+        lookup = getattr(topo, "routes_cached", topo.routes)
+        links, dirs, nhops = lookup(all_src, all_dst)
+        off = 0
+        for ps in msg_steps:
+            M = len(ps.msgs)
+            routed[id(ps)] = (links[off:off + M], dirs[off:off + M],
+                              nhops[off:off + M])
+            off += M
+
+    # ---- segmentation: contiguous runs sharing one bucket ---------------
+    runs: List[tuple] = []               # (steps, cap)
+    run: List[_HostStep] = []
+    run_cap: Optional[int] = None        # None until a message step joins
+    for ps in steps:
+        c = bucket_cap(len(ps.msgs), bucket_min) if ps.msgs is not None \
+            else None
+        if run and c is not None and run_cap is not None and c != run_cap:
+            runs.append((run, run_cap))
+            run, run_cap = [], None
+        run.append(ps)
+        if c is not None:
+            run_cap = run_cap or c
+    if run:
+        runs.append((run, run_cap or 0))
+
+    # One shared step-count bucket per cap: same-cap segments pad to the
+    # longest run's bucket, so the executor compiles ONE program per
+    # (static structure, cap) — no-op pad steps are a cheap cond-false,
+    # extra program shapes are a ~seconds compile each.  The pad factor is
+    # bounded (MAX_STEP_PAD): on fragmented traces a short segment never
+    # pads past MAX_STEP_PAD x its own bucket, trading at most a couple of
+    # extra program shapes for O(longest-run) pad work per fragment.
+    cap_bucket = {}
+    for seg_steps, cap in runs:
+        cap_bucket[cap] = max(cap_bucket.get(cap, 0),
+                              step_bucket(len(seg_steps)))
+    segments = [
+        _stack_segment(seg_steps, cap, topo.n_nodes, routed, H,
+                       min(cap_bucket[cap],
+                           MAX_STEP_PAD * step_bucket(len(seg_steps))))
+        for seg_steps, cap in runs]
+
+    # ---- host-scalar bookkeeping (accumulation order matches the
+    #      reference engine exactly) --------------------------------------
+    busy = 0.0
+    for st in trace.steps:
+        if st.compute_nodes is not None and len(st.compute_nodes):
+            busy += float(st.compute_secs.sum())
+
+    part_mask = np.zeros(topo.n_nodes, bool)
+    part_mask[np.asarray(trace.nodes, np.int64)] = True
+
+    return TracePlan(
+        n_nodes=topo.n_nodes, n_links=topo.n_links, max_hops=H,
+        part_mask=jnp.asarray(part_mask),
+        has_participants=len(trace.nodes) > 0,
+        busy=busy, n_msgs=int(trace.n_messages),
+        n_message_steps=len(msg_steps), segments=segments,
+        name=trace.name, bucket_min=bucket_min)
+
+
+# ---------------------------------------------------------------------------
+# Per-(trace, topo) plan cache
+# ---------------------------------------------------------------------------
+
+# id(trace) -> (weakref(trace), fingerprint, {topo: TracePlan})
+_PLAN_CACHE: dict = {}
+
+
+def _fingerprint(trace) -> tuple:
+    return (len(trace.steps), trace.n_messages,
+            getattr(trace, "version", 0))
+
+
+def compile_plan(trace, topo, bucket_min: int = BUCKET_MIN) -> TracePlan:
+    """Compile (or fetch the cached) TracePlan for a (trace, topo) pair.
+
+    The cache keys on trace identity + a structural fingerprint (step and
+    message counts, builder version): every sweep group and warm rerun hits
+    the same plan, while builder-API mutation after planning recompiles.
+    """
+    key = id(trace)
+    entry = _PLAN_CACHE.get(key)
+    fp = _fingerprint(trace)
+    if entry is None or entry[0]() is not trace or entry[1] != fp:
+        ref = weakref.ref(trace, lambda _r, k=key: _PLAN_CACHE.pop(k, None))
+        entry = (ref, fp, {})
+        _PLAN_CACHE[key] = entry
+    plans = entry[2]
+    ck = (topo, bucket_min)
+    if ck not in plans:
+        plans[ck] = _compile(trace, topo, bucket_min)
+    return plans[ck]
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+
+
+def plan_cache_info() -> dict:
+    return {"traces": len(_PLAN_CACHE),
+            "plans": sum(len(e[2]) for e in _PLAN_CACHE.values())}

@@ -13,6 +13,10 @@ see DESIGN.md §3):
   3. if ``barrier``, all participants synchronize to the max clock.
 Collectives are expanded into multiple steps (one per round), so their
 internal dependency structure is preserved.
+
+Traces are compiled once per topology into a device-resident
+:class:`~repro.traffic.plan.TracePlan` (DESIGN.md §2); the ``version``
+counter below lets that plan cache detect builder-API mutation.
 """
 from __future__ import annotations
 
@@ -35,6 +39,7 @@ class Trace:
     nodes: np.ndarray                            # participating node ids
     steps: List[Step] = field(default_factory=list)
     name: str = ""
+    version: int = field(default=0, repr=False, compare=False)
 
     # -- builder helpers -----------------------------------------------------
     def compute(self, secs):
@@ -43,11 +48,13 @@ class Trace:
                                self.nodes.shape).copy()
         self.steps.append(Step(compute_nodes=self.nodes.copy(),
                                compute_secs=secs))
+        self.version += 1
         return self
 
     def messages(self, msgs, barrier=False):
         msgs = np.asarray(msgs, np.int64).reshape(-1, 3)
         self.steps.append(Step(msgs=msgs, barrier=barrier))
+        self.version += 1
         return self
 
     def rounds(self, rounds, barrier_last=False):
@@ -58,6 +65,7 @@ class Trace:
 
     def barrier(self):
         self.steps.append(Step(barrier=True))
+        self.version += 1
         return self
 
     @property
