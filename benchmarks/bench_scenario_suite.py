@@ -1,0 +1,69 @@
+"""Scenario-suite throughput: the (scenario x policy) grid on the
+multi-trace batched replay path (beyond paper).
+
+Measures what the new axis buys: wall time for a whole catalog sweep and
+the per-cell rate, with plan stacking (``traffic.plan.stack_plans``)
+collapsing same-shape scenarios into shared compiled programs.  The
+``BENCH_scenario_suite.json`` record starts the multi-trace perf
+trajectory: ``rows`` carry cells/s, and warm passes exercise the trace /
+plan / program caches end to end.
+
+Scales:
+  * tiny  — the 4-scenario dc-* family (one stack) x 2 policies, 8-node
+    allocations on the 12-node Megafly: the CI smoke grid.
+  * small — 8 scenarios across all four families x the default 4-policy
+    grid on the 80-node Megafly.
+  * paper — the full catalog at 64-node allocations on the 4160-node
+    Megafly.
+"""
+from __future__ import annotations
+
+from benchmarks.common import PM, Row, get_topo, timed
+from repro import scenarios as SC
+from repro.core.eee import Policy
+from repro.core.sweep import group_policies
+
+
+def _grid(scale: str) -> dict:
+    if scale == "tiny":
+        return {
+            "fixed-ds-100us": Policy(kind="fixed", t_pdt=1e-4,
+                                     sleep_state="deep_sleep"),
+            "perfbound-1pct": Policy(kind="perfbound", bound=0.01),
+        }
+    return SC.default_policy_grid()
+
+
+def _scenarios(scale: str) -> tuple:
+    if scale == "tiny":
+        return ["dc-poisson", "dc-hotspot", "dc-onoff", "dc-incast"], 8
+    if scale == "paper":
+        return SC.list_scenarios(), 64
+    return ["ml-qwen2-1.5b", "ml-gemma3-4b", "hpc-stencil3d",
+            "hpc-spectral", "dc-poisson", "dc-onoff", "dc-incast",
+            "app-lammps"], None
+
+
+def n_policies(scale: str) -> int:
+    return len(_grid(scale))
+
+
+def run(scale: str):
+    topo = get_topo(scale)
+    names, n_nodes = _scenarios(scale)
+    grid = _grid(scale)
+    res, us = timed(SC.run_suite, topo, scenarios=names, policies=grid,
+                    pm=PM, n_nodes=n_nodes)
+    cells = len(names) * (len(grid) + 1)          # baseline lane rides along
+    rows = [Row("suite/grid", us,
+                f"{len(names)}x{len(grid) + 1}cells_"
+                f"{len(group_policies(grid))}groups_"
+                f"{cells / (us / 1e6):.2f}cells_per_s")]
+    for sc, pols in res.items():
+        best = min((p for p in pols if p != "baseline"),
+                   key=lambda p: pols[p]["total_energy"])
+        rows.append(Row(
+            f"suite/{sc}", us / len(names),
+            f"best={best}_saved{pols[best]['energy_saved_pct']:.2f}pct_"
+            f"ovh{pols[best]['exec_overhead_pct']:.2f}pct"))
+    return rows

@@ -31,6 +31,7 @@ MODULES = [
     ("kernels", "benchmarks.bench_kernels"),               # kernel parity
     ("llm_traffic", "benchmarks.bench_llm_traffic"),       # beyond paper
     ("topology", "benchmarks.bench_topology"),             # beyond paper
+    ("scenario_suite", "benchmarks.bench_scenario_suite"),  # beyond paper
 ]
 
 

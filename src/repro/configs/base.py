@@ -165,6 +165,33 @@ class ModelConfig:
         from repro.models import model as _m
         return _m.count_params(self, active_only=True)
 
+    # -- traffic sizing (scenario synthesis) ------------------------------
+    def layer_param_count(self) -> int:
+        """Analytic parameter count of ONE decoder block.
+
+        Used by ``repro.scenarios.ml`` to size gradient/activation
+        collectives without instantiating the model; approximate for
+        hybrid families (recurrent core only), which is fine for traffic
+        synthesis — payload sizes, not training math.
+        """
+        d, ff = self.d_model, self.d_ff
+        if self.family in ("ssm", "hybrid"):
+            core = 3 * d * self.d_inner + self.d_inner * d
+        else:
+            core = (d * self.num_heads * self.head_dim
+                    + 2 * d * self.num_kv_heads * self.head_dim
+                    + self.num_heads * self.head_dim * d)
+        if self.num_experts:
+            mlp = d * self.num_experts + 3 * d * ff * self.num_experts
+        else:
+            mlp = (3 if self.act == "swiglu" else 2) * d * ff
+        return core + mlp
+
+    def embed_param_count(self) -> int:
+        """Embedding-table parameters (padded vocab), for weight
+        distribution / setup traffic."""
+        return self.padded_vocab * self.d_model
+
     def smoke(self) -> "ModelConfig":
         """A reduced config of the same family for CPU smoke tests."""
         kw = dict(

@@ -48,10 +48,15 @@ def stack_params(pols) -> dict:
 # ---------------------------------------------------------------------------
 
 
-@lru_cache(maxsize=None)
-def _segment_runner(proto: Policy, pm: PowerModel, n_links: int, cap: int,
-                    collect_events: bool):
-    """One jitted scan over a segment's steps; retraces per (S, B) shape."""
+def _make_run(proto: Policy, pm: PowerModel, n_links: int, cap: int,
+              collect_events: bool):
+    """Build the (un-jitted) per-trace segment program: one ``lax.scan``
+    over a segment's steps with B policy lanes vmapped inside the step.
+
+    ``_segment_runner`` jits it directly (the single-trace path);
+    ``_multi_segment_runner`` vmaps it once more over a leading trace axis
+    (the ``PlanBatch`` path) — same step arithmetic, so per-lane results
+    are bit-identical between the two."""
 
     def _lane(net, p, ready, lat_sum, lat_max, mx):
         """Message phase of one step for ONE policy lane."""
@@ -79,7 +84,6 @@ def _segment_runner(proto: Policy, pm: PowerModel, n_links: int, cap: int,
             return net, ready, lat_sum, lat_max, out[2]
         return net, ready, lat_sum, lat_max
 
-    @partial(jax.jit, donate_argnums=(0, 2, 3, 4))
     def run(nets, params, ready, lat_sum, lat_max, part_mask, xs):
         B = ready.shape[0]
 
@@ -119,6 +123,28 @@ def _segment_runner(proto: Policy, pm: PowerModel, n_links: int, cap: int,
         return lax.scan(step, (nets, ready, lat_sum, lat_max), xs)
 
     return run
+
+
+@lru_cache(maxsize=None)
+def _segment_runner(proto: Policy, pm: PowerModel, n_links: int, cap: int,
+                    collect_events: bool):
+    """One jitted scan over a segment's steps; retraces per (S, B) shape."""
+    return partial(jax.jit, donate_argnums=(0, 2, 3, 4))(
+        _make_run(proto, pm, n_links, cap, collect_events))
+
+
+@lru_cache(maxsize=None)
+def _multi_segment_runner(proto: Policy, pm: PowerModel, n_links: int,
+                          cap: int):
+    """The multi-trace runner: the per-trace program vmapped over a leading
+    T axis.  ``params`` is shared across traces (in_axes None) — every
+    trace lane replays the same stacked policy group — while the carry,
+    participant mask and segment arrays are per-trace.  Retraces per
+    (T, S, B) shape; programs are shared across stack groups with equal
+    segment shapes."""
+    run = _make_run(proto, pm, n_links, cap, collect_events=False)
+    return partial(jax.jit, donate_argnums=(0, 2, 3, 4))(
+        jax.vmap(run, in_axes=(0, None, 0, 0, 0, 0, 0)))
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +209,79 @@ def replay_plan(plan, pols, pm, collect_events=False):
         plan, proto, params, pm, carry, collect_events)
     return (nets, np.asarray(t_end), np.asarray(lat_sum),
             np.asarray(lat_max), seg_events)
+
+
+# ---------------------------------------------------------------------------
+# Multi-trace driver: a (traces x policies) grid in one program per segment
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _participant_max_multi(mask, ready):
+    """Per-(trace, lane) makespan: max ``ready`` over each trace's own
+    participants.  mask (T, n_nodes), ready (T, B, n_nodes) -> (T, B)."""
+    return jnp.max(jnp.where(mask[:, None, :], ready, -jnp.inf), axis=-1)
+
+
+@lru_cache(maxsize=None)
+def _multi_init(proto: Policy, n_links: int, n_nodes: int, T: int):
+    """Jitted (T, B) carry constructor — ONE program per (proto, T, B)
+    instead of a spray of eager broadcast/zeros ops, keeping the grid
+    path's compile count bounded by its segment programs."""
+    @jax.jit
+    def init(params):
+        nets1 = jax.vmap(
+            lambda p: S.init_net(n_links, proto, params=p))(params)
+        B = next(iter(params.values())).shape[0]
+        nets = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (T,) + x.shape), nets1)
+        return (nets, jnp.zeros((T, B, n_nodes), jnp.float64),
+                jnp.zeros((T, B), jnp.float64), jnp.zeros((T, B), jnp.float64))
+    return init
+
+
+def init_lanes_multi(pols, batch):
+    """Lane setup for a :class:`~repro.traffic.plan.PlanBatch`: the B-lane
+    initial state of ``init_lanes`` replicated along a leading T trace axis
+    (initial net state depends only on the policy, so every trace lane
+    starts from the same bits as its single-trace replay)."""
+    proto = canonical_proto(pols[0])
+    params = stack_params(pols)
+    carry = _multi_init(proto, batch.n_links, batch.n_nodes,
+                        batch.n_traces)(params)
+    return proto, params, carry
+
+
+def run_segments_multi(batch, proto, params, pm, carry):
+    """Execute every segment of a :class:`PlanBatch`, carrying the whole
+    (T, B, ...) grid state on device.  Host work per segment is one
+    jitted-call dispatch, exactly like the single-trace path.  Returns
+    device ``(nets, t_end (T, B), lat_sum (T, B), lat_max (T, B))``."""
+    for seg in batch.segments:
+        run = _multi_segment_runner(proto, pm, batch.n_links, seg.cap)
+        carry, _ = run(carry[0], params, carry[1], carry[2], carry[3],
+                       batch.part_mask, seg.xs)
+    nets, ready, lat_sum, lat_max = carry
+    t_end = _participant_max_multi(batch.part_mask, ready)
+    return nets, t_end, lat_sum, lat_max
+
+
+def replay_plans(batch, pols, pm):
+    """Compiled (traces x policies) grid replay over a ``PlanBatch``.
+
+    Returns ``(nets, t_end, lat_sum, lat_max)`` where the net state keeps
+    its (T, B, ...) leading axes on device and the scalar accumulators come
+    back as host numpy (T, B) arrays.  Per-(t, b) cell results are
+    bit-identical to that trace's own single-trace ``replay_plan`` —
+    the multi runner is the same program vmapped over T.
+    """
+    proto, params, carry = init_lanes_multi(pols, batch)
+    nets, t_end, lat_sum, lat_max = run_segments_multi(
+        batch, proto, params, pm, carry)
+    t_end = np.asarray(t_end)
+    # traces with no participants have an all-False mask row (-inf max)
+    t_end = np.where(batch.has_participants[:, None], t_end, 0.0)
+    return nets, t_end, np.asarray(lat_sum), np.asarray(lat_max)
 
 
 def events_to_host(plan, seg_events):

@@ -337,6 +337,39 @@ def simulate_trace_reference(trace, topo, policy: Policy,
     return res, all_events
 
 
+def unused_key(mapping: dict, base: str = "__baseline__") -> str:
+    """A key not present in ``mapping`` (prefixing underscores as needed) —
+    lets a hidden baseline lane ride in a user-named policy grid."""
+    while base in mapping:
+        base = "_" + base
+    return base
+
+
+def relative_rows(base: SimResult, results: dict,
+                  baseline: str = "baseline") -> dict:
+    """The §4 table protocol: each result as a dict row with overhead /
+    saving percentages vs ``base`` (which leads the rows, reporting
+    zeros).  Degenerate baselines (empty traces) report 0 instead of
+    dividing by zero.  Shared by ``compare_policies`` and the scenario
+    suite (``repro.scenarios.suite``)."""
+    out = {baseline: dict(base.as_dict(), exec_overhead_pct=0.0,
+                          latency_overhead_pct=0.0, energy_saved_pct=0.0,
+                          link_energy_saved_pct=0.0)}
+    for name, r in results.items():
+        out[name] = dict(
+            r.as_dict(),
+            exec_overhead_pct=100 * (r.makespan / base.makespan - 1)
+            if base.makespan else 0.0,
+            latency_overhead_pct=100 * (r.mean_latency / base.mean_latency - 1)
+            if base.mean_latency else 0.0,
+            energy_saved_pct=100 * (1 - r.total_energy / base.total_energy)
+            if base.total_energy else 0.0,
+            link_energy_saved_pct=100 * (1 - r.link_energy / base.link_energy)
+            if base.link_energy else 0.0,
+        )
+    return out
+
+
 def compare_policies(trace, topo, policies: dict, pm: PowerModel | None = None,
                      baseline: str = "baseline",
                      max_group: int | None = None):
@@ -349,23 +382,9 @@ def compare_policies(trace, topo, policies: dict, pm: PowerModel | None = None,
     """
     from repro.core.sweep import sweep_policies  # late: sweep imports us
     pm = pm or PowerModel()
-    base_key = "__baseline__"
-    while base_key in policies:
-        base_key = "_" + base_key
+    base_key = unused_key(policies)
     results = sweep_policies(trace, topo,
                              {base_key: Policy(kind="none"), **policies},
                              pm, max_group=max_group)
     base = results.pop(base_key)
-    out = {baseline: dict(base.as_dict(), exec_overhead_pct=0.0,
-                          latency_overhead_pct=0.0, energy_saved_pct=0.0,
-                          link_energy_saved_pct=0.0)}
-    for name, r in results.items():
-        out[name] = dict(
-            r.as_dict(),
-            exec_overhead_pct=100 * (r.makespan / base.makespan - 1),
-            latency_overhead_pct=100 * (r.mean_latency / base.mean_latency - 1)
-            if base.mean_latency else 0.0,
-            energy_saved_pct=100 * (1 - r.total_energy / base.total_energy),
-            link_energy_saved_pct=100 * (1 - r.link_energy / base.link_energy),
-        )
-    return out
+    return relative_rows(base, results, baseline)

@@ -31,12 +31,13 @@ same predictor batch together; a typical paper grid (2 kinds x 3 bounds x
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.core import replay
 from repro.core import simulator as S
 from repro.core.eee import PowerModel, static_key
 from repro.core.replay import stack_params  # noqa: F401 (public re-export)
-from repro.traffic.plan import compile_plan
+from repro.traffic.plan import compile_plan, group_stackable, stack_plans
 
 
 # ---------------------------------------------------------------------------
@@ -98,3 +99,58 @@ def sweep_policies(trace, topo, policies: dict, pm: PowerModel | None = None,
             out.update(_sweep_group(trace, topo, chunk,
                                     [policies[n] for n in chunk], pm))
     return {name: out[name] for name in policies}
+
+
+# ---------------------------------------------------------------------------
+# (scenarios x policies) grid: multi-trace batched replay
+# ---------------------------------------------------------------------------
+
+
+def sweep_scenarios(traces: dict, topo, policies: dict,
+                    pm: PowerModel | None = None,
+                    max_group: int | None = None) -> dict:
+    """Evaluate a full (traces x policies) grid, batched along BOTH axes.
+
+    ``traces`` is {name: Trace}.  Each trace compiles (or fetches) its
+    cached :class:`~repro.traffic.plan.TracePlan`; plans sharing a compiled
+    shape (``plan.plan_shape_key``) stack along a leading trace axis
+    (``plan.stack_plans``), and each static policy group replays the whole
+    stack in one vmapped program per segment shape
+    (``replay.replay_plans``).  Compile count is therefore bounded by
+    distinct (segment shape, T, B) triples — not by traces x policy-groups:
+    stack groups with equal segment shapes share programs, and singleton
+    stacks (T=1) still reuse any equal-shape program.
+
+    Returns ``{trace_name: {policy_name: SimResult}}`` in the callers'
+    insertion orders; every cell is bit-identical to that trace's own
+    serial ``simulator.simulate_trace`` under the same policy.
+
+    ``max_group`` caps the policy-batch width exactly as in
+    ``sweep_policies``; device memory scales with T x B lanes.
+    """
+    pm = pm or PowerModel()
+    tnames = list(traces)
+    plans = [compile_plan(traces[n], topo) for n in tnames]
+    out: dict = {n: {} for n in tnames}
+    for idx in group_stackable(plans):
+        batch = stack_plans([plans[i] for i in idx],
+                            [tnames[i] for i in idx])
+        for pnames in group_policies(policies):
+            cap = max_group or len(pnames)
+            for i in range(0, len(pnames), cap):
+                chunk = pnames[i:i + cap]
+                pols = [policies[n] for n in chunk]
+                nets, t_end, lat_sum, lat_max = replay.replay_plans(
+                    batch, pols, pm)
+                # one readback for the whole (T, B) grid: per-cell host
+                # numpy views, not one tiny sliced device program per cell
+                nets = jax.tree.map(np.asarray, nets)
+                for ti, gi in enumerate(idx):
+                    for b, pname in enumerate(chunk):
+                        net_tb = jax.tree.map(lambda x: x[ti, b], nets)
+                        out[tnames[gi]][pname] = S.summarize(
+                            net_tb, float(t_end[ti, b]),
+                            float(batch.busy[ti]),
+                            float(lat_sum[ti, b]), float(lat_max[ti, b]),
+                            int(batch.n_msgs[ti]), pols[b], pm, topo)
+    return {tn: {pn: out[tn][pn] for pn in policies} for tn in traces}

@@ -1,0 +1,27 @@
+"""Scenario engine: parametric workload synthesis + the named catalog.
+
+Public surface:
+
+* :class:`~repro.scenarios.spec.Scenario`, ``build_trace`` — declarative
+  specs lowering to :class:`~repro.traffic.trace.Trace`;
+* ``register_scenario`` / ``get_scenario`` / ``list_scenarios`` /
+  ``catalog`` — the registry (built-ins installed on import);
+* ``run_suite`` / ``default_policy_grid`` / ``format_table`` /
+  ``table_rows`` — the (scenario x policy) suite runner on the
+  multi-trace batched replay path.
+"""
+from repro.scenarios import catalog as _catalog  # noqa: F401 (registers)
+from repro.scenarios.registry import (catalog, get_scenario,  # noqa: F401
+                                      list_scenarios, register_scenario)
+from repro.scenarios.spec import (Scenario, build_trace,  # noqa: F401
+                                  builder, builder_names, params_of, rng,
+                                  trace_cache_clear)
+from repro.scenarios.suite import (default_policy_grid,  # noqa: F401
+                                   format_table, run_suite, table_rows)
+
+__all__ = [
+    "Scenario", "build_trace", "builder", "builder_names", "params_of",
+    "rng", "trace_cache_clear", "catalog", "get_scenario", "list_scenarios",
+    "register_scenario", "default_policy_grid", "format_table", "run_suite",
+    "table_rows",
+]

@@ -1,0 +1,22 @@
+"""Scenario wrappers for the paper's §4 application generators.
+
+``repro.traffic.generators`` stays the low-level API; these builders lift
+the four applications into the scenario catalog so suites sweep them next
+to the synthetic ML/HPC/datacenter families with one mechanism (and one
+trace/plan cache).
+"""
+from __future__ import annotations
+
+from repro.scenarios.spec import builder
+from repro.traffic import generators as G
+
+
+@builder("paper_app")
+def paper_app(topo, n_nodes, seed, app, **kw):
+    """Any of the paper's generators (``lammps``/``patmos``/``mlwf``/
+    ``alexnet``) as a scenario; extra params pass through (e.g. ``iters``).
+    The generators are deterministic, so ``seed`` is accepted for the
+    uniform builder signature but unused."""
+    if app not in G.GENERATORS:
+        raise KeyError(f"unknown app {app!r}; have {sorted(G.GENERATORS)}")
+    return G.GENERATORS[app](topo, n_nodes=n_nodes, **kw)

@@ -1,0 +1,69 @@
+"""HPC scenario synthesis: stencil/halo and bulk-synchronous iteration
+structures (the paper's §4 application class, parameterized).
+
+Two families:
+
+* ``stencil_halo`` — iterative nearest-neighbor halo exchange on a
+  pseudo-``dims``-D process grid with a periodic global residual
+  all-reduce: the LAMMPS/PATMOS-style "compute, exchange ghosts, reduce"
+  skeleton with tunable compute/communication ratio and imbalance.
+* ``bsp_spectral`` — alternating compute + global transpose (all-to-all)
+  rounds, the FFT/spectral-solver signature whose dense all-to-all bursts
+  are the hardest case for link sleeping.
+
+Seeded per-node compute imbalance (a few percent by default) staggers
+injection times the way real iterative codes do — perfectly synchronized
+ranks would give the EEE policies an unrealistically easy square wave.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.scenarios.spec import builder, rng
+from repro.traffic import collectives as C
+from repro.traffic.generators import allocate
+from repro.traffic.trace import Trace
+
+
+@builder("stencil_halo")
+def stencil_halo(topo, n_nodes, seed, iters=12, dims=3, halo_bytes=128 << 10,
+                 compute_secs=2e-3, imbalance=0.05, reduce_every=4,
+                 reduce_bytes=8 << 10, mapping="linear"):
+    """BSP stencil: {compute, halo exchange, periodic residual allreduce}."""
+    nodes = allocate(topo, n_nodes, mapping, seed)
+    t = Trace(nodes=nodes, name=f"stencil{dims}d")
+    r = rng(seed)
+    t.rounds(C.broadcast(nodes, 1 << 20))        # domain decomposition
+    t.compute(r.uniform(0.8, 1.2, n_nodes) * 10 * compute_secs)   # setup
+    for i in range(iters):
+        t.compute(r.uniform(1 - imbalance, 1 + imbalance, n_nodes)
+                  * compute_secs)
+        t.rounds(C.p2p_halo(nodes, halo_bytes, dims=dims))
+        if (i + 1) % reduce_every == 0:
+            t.rounds(C.allreduce(nodes, reduce_bytes))   # residual norm
+    t.rounds(C.reduce(nodes, 1 << 20), barrier_last=True)  # gather result
+    return t
+
+
+@builder("bsp_spectral")
+def bsp_spectral(topo, n_nodes, seed, iters=8, transpose_bytes=512 << 10,
+                 compute_secs=1.5e-3, imbalance=0.03, reduce_every=2,
+                 mapping="linear"):
+    """Spectral/FFT skeleton: compute, forward transpose (all-to-all),
+    compute, inverse transpose, periodic convergence allreduce."""
+    nodes = allocate(topo, n_nodes, mapping, seed)
+    t = Trace(nodes=nodes, name="spectral")
+    r = rng(seed)
+    t.rounds(C.broadcast(nodes, 4 << 20))        # operator setup
+    t.compute(r.uniform(0.9, 1.1, n_nodes) * 5 * compute_secs)
+    for i in range(iters):
+        t.compute(r.uniform(1 - imbalance, 1 + imbalance, n_nodes)
+                  * compute_secs)
+        t.rounds(C.alltoall(nodes, transpose_bytes))
+        t.compute(r.uniform(1 - imbalance, 1 + imbalance, n_nodes)
+                  * compute_secs)
+        t.rounds(C.alltoall(nodes, transpose_bytes))
+        if (i + 1) % reduce_every == 0:
+            t.rounds(C.allreduce(nodes, 4 << 10))
+    t.rounds(C.reduce(nodes, 1 << 20), barrier_last=True)
+    return t

@@ -1,0 +1,37 @@
+"""Scenario registry: the named catalog the suite runner sweeps.
+
+``repro.scenarios.catalog`` registers the built-in entries at package
+import; user code can register more at runtime (e.g. converted VEF
+captures wrapped in a builder).  Names are unique; lookups fail loudly
+with the available names.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.scenarios.spec import Scenario
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register_scenario(spec: Scenario) -> Scenario:
+    assert spec.name not in _REGISTRY, f"duplicate scenario {spec.name!r}"
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_scenarios(family: Optional[str] = None) -> list:
+    return sorted(n for n, s in _REGISTRY.items()
+                  if family is None or s.family == family)
+
+
+def catalog() -> Dict[str, Scenario]:
+    """The full registry, insertion-ordered (catalog order)."""
+    return dict(_REGISTRY)

@@ -1,0 +1,130 @@
+"""Stochastic datacenter arrival scenarios: Poisson, ON-OFF bursty, incast.
+
+The related EEE literature (Cenedese et al. arXiv:1503.02843,
+Herrería-Alonso et al. arXiv:1510.03694) shows power/performance
+trade-offs INVERTING with inter-arrival structure — smooth Poisson
+traffic rewards aggressive sleeping while bursty ON-OFF traffic punishes
+it with wake storms.  These builders span that axis.
+
+Time is discretized into ``windows`` service windows.  Each window is one
+trace step pair: a per-node compute advance of ~``window_secs`` with
+seeded jitter (staggering injection clocks so arrivals spread inside the
+window instead of landing in lockstep), then the window's sampled flows as
+one message step.  All sampling runs ONCE at synthesis time on the seeded
+counter-based scenario RNG (``spec.rng``) — the replay hot path is the
+ordinary compiled plan executor, no RNG on device and none on host.
+
+Every builder keeps per-window flow counts within one message bucket
+(``max_flows`` ≤ 64) and emits exactly ``windows`` message steps, so the
+whole ``dc-*`` catalog family lowers to the SAME plan shape and stacks
+along the multi-trace axis (``plan.stack_plans``) into a single compiled
+(scenario x policy) grid program.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.scenarios.spec import builder, rng
+from repro.traffic.generators import allocate
+from repro.traffic.trace import Trace
+
+
+def _flow_sizes(r, n, mean_bytes):
+    """Heavy-tailed flow sizes: lognormal around ``mean_bytes``, clipped to
+    [64 B, 4 MiB] — mice dominate counts, elephants dominate bytes."""
+    raw = r.lognormal(mean=np.log(mean_bytes), sigma=1.2, size=n)
+    return np.clip(raw, 64, 4 << 20).astype(np.int64)
+
+
+def _pairs(r, nodes, m, dst_weights=None):
+    """m (src, dst) pairs with src != dst; optional non-uniform dst bias."""
+    n = len(nodes)
+    src_i = r.integers(0, n, m)
+    if dst_weights is None:
+        dst_i = (src_i + r.integers(1, n, m)) % n
+    else:
+        dst_i = r.choice(n, size=m, p=dst_weights)
+        clash = dst_i == src_i
+        dst_i[clash] = (dst_i[clash] + 1) % n
+    return nodes[src_i], nodes[dst_i]
+
+
+def _window_compute(t, r, n, window_secs, jitter):
+    t.compute(r.uniform(1 - jitter, 1 + jitter, n) * window_secs)
+
+
+def _emit_window(t, r, nodes, m, mean_bytes, max_flows, dst_weights=None,
+                 barrier=False):
+    m = int(np.clip(m, 1, max_flows))
+    src, dst = _pairs(r, nodes, m, dst_weights)
+    t.messages(np.stack([src, dst, _flow_sizes(r, m, mean_bytes)], axis=1),
+               barrier=barrier)
+
+
+@builder("poisson")
+def poisson(topo, n_nodes, seed, windows=24, window_secs=5e-3, rate=2000.0,
+            mean_bytes=32 << 10, jitter=0.5, hot_frac=0.0, max_flows=64,
+            mapping="linear"):
+    """Memoryless arrivals: per window, Poisson(rate x window) flows between
+    uniform (or, with ``hot_frac``, skewed) endpoint pairs."""
+    nodes = allocate(topo, n_nodes, mapping, seed)
+    t = Trace(nodes=nodes, name="poisson")
+    r = rng(seed)
+    w = None
+    if hot_frac > 0:                  # a few hot destinations take hot_frac
+        n_hot = max(n_nodes // 8, 1)
+        w = np.full(n_nodes, (1 - hot_frac) / (n_nodes - n_hot))
+        w[r.choice(n_nodes, n_hot, replace=False)] = hot_frac / n_hot
+    for i in range(windows):
+        _window_compute(t, r, n_nodes, window_secs, jitter)
+        _emit_window(t, r, nodes, r.poisson(rate * window_secs), mean_bytes,
+                     max_flows, w, barrier=i == windows - 1)
+    return t
+
+
+@builder("onoff")
+def onoff(topo, n_nodes, seed, windows=24, window_secs=5e-3, rate_on=6000.0,
+          rate_off=100.0, p_on=0.35, p_stay_on=0.6, mean_bytes=64 << 10,
+          jitter=0.5, max_flows=64, mapping="linear"):
+    """Bursty two-state (Markov-modulated) arrivals: windows flip between
+    an ON state near saturation and a near-idle OFF state — the wake-storm
+    regime where frame-coalescing/EEE trade-offs invert."""
+    nodes = allocate(topo, n_nodes, mapping, seed)
+    t = Trace(nodes=nodes, name="onoff")
+    r = rng(seed)
+    on = r.random() < p_on
+    for i in range(windows):
+        _window_compute(t, r, n_nodes, window_secs, jitter)
+        rate = rate_on if on else rate_off
+        _emit_window(t, r, nodes, r.poisson(rate * window_secs), mean_bytes,
+                     max_flows, barrier=i == windows - 1)
+        on = r.random() < (p_stay_on if on else p_on)
+    return t
+
+
+@builder("incast")
+def incast(topo, n_nodes, seed, windows=24, window_secs=5e-3, fan_in=8,
+           flow_bytes=256 << 10, background_rate=200.0,
+           mean_bytes=16 << 10, jitter=0.5, max_flows=64, mapping="linear"):
+    """Partition-aggregate incast: each window, one random aggregator pulls
+    ``fan_in`` synchronized responses (serializing at its access link) over
+    a trickle of background flows."""
+    nodes = allocate(topo, n_nodes, mapping, seed)
+    t = Trace(nodes=nodes, name="incast")
+    r = rng(seed)
+    fan_in = min(fan_in, max_flows)   # keep the one-bucket shape guarantee
+    for i in range(windows):
+        _window_compute(t, r, n_nodes, window_secs, jitter)
+        agg = int(r.integers(0, n_nodes))
+        srcs = (agg + 1 + r.choice(n_nodes - 1, min(fan_in, n_nodes - 1),
+                                   replace=False)) % n_nodes
+        msgs = [[int(nodes[s]), int(nodes[agg]), int(flow_bytes)]
+                for s in srcs]
+        m_bg = max(0, min(int(r.poisson(background_rate * window_secs)),
+                          max_flows - len(msgs)))
+        if m_bg:
+            src, dst = _pairs(r, nodes, m_bg)
+            msgs += np.stack([src, dst, _flow_sizes(r, m_bg, mean_bytes)],
+                             axis=1).tolist()
+        t.messages(msgs, barrier=i == windows - 1)
+    return t

@@ -1,0 +1,114 @@
+"""Scenario-suite runner: a named catalog x policy grid in batched replays.
+
+``run_suite`` is the one-call evaluation loop the paper runs per
+application (§4), generalized over the scenario catalog and executed on
+the multi-trace batched path: every scenario's trace builds once
+(``spec.build_trace`` memo), plans compile once per (trace, topology)
+(plan cache), same-shape plans stack along the trace axis and each static
+policy group replays the whole stack in one compiled program per segment
+shape (``sweep.sweep_scenarios``).  An always-on baseline rides along in
+the grid (its own static group, stacked over all traces like any other)
+and every scenario's energy/degradation numbers are reported relative to
+ITS OWN baseline — the paper's protocol.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Union
+
+from repro.core.eee import Policy, PowerModel
+from repro.core.simulator import relative_rows, unused_key
+from repro.core.sweep import sweep_scenarios
+from repro.scenarios.registry import get_scenario, list_scenarios
+from repro.scenarios.spec import Scenario, build_trace
+
+_BASELINE_POLICY = Policy(kind="none")
+
+
+def default_policy_grid() -> Dict[str, Policy]:
+    """A compact representative grid: both sleep states on fixed PDT plus
+    both adaptive predictors — 4 policies in 2 static groups."""
+    return {
+        "fixed-fw-10us": Policy(kind="fixed", t_pdt=1e-5,
+                                sleep_state="fast_wake"),
+        "fixed-ds-100us": Policy(kind="fixed", t_pdt=1e-4,
+                                 sleep_state="deep_sleep"),
+        "perfbound-1pct": Policy(kind="perfbound", bound=0.01,
+                                 sleep_state="deep_sleep"),
+        "pbc-1pct": Policy(kind="perfbound_correct", bound=0.01,
+                           sleep_state="deep_sleep"),
+    }
+
+
+def resolve(scenarios: Optional[Iterable[Union[str, Scenario]]] = None,
+            n_nodes: Optional[int] = None, seed: Optional[int] = None
+            ) -> Dict[str, Scenario]:
+    """Names/specs -> {name: Scenario}; default the whole catalog.
+    ``n_nodes``/``seed`` rescale every entry (tiny topologies, CI smoke)."""
+    if scenarios is None:
+        scenarios = list_scenarios()
+    specs = {}
+    for s in scenarios:
+        spec = get_scenario(s) if isinstance(s, str) else s
+        if n_nodes is not None or seed is not None:
+            spec = spec.scaled(n_nodes or spec.n_nodes, seed)
+        specs[spec.name] = spec
+    return specs
+
+
+def run_suite(topo, scenarios=None, policies: Optional[Dict] = None,
+              pm: Optional[PowerModel] = None, n_nodes: Optional[int] = None,
+              max_group: Optional[int] = None, baseline: str = "baseline"
+              ) -> Dict[str, Dict[str, dict]]:
+    """Sweep (scenarios x policies) and report per-scenario tables.
+
+    Returns ``{scenario: {policy: row}}`` where each row is the
+    ``SimResult`` dict plus ``exec_overhead_pct`` / ``latency_overhead_pct``
+    / ``energy_saved_pct`` / ``link_energy_saved_pct`` relative to that
+    scenario's always-on baseline (included under ``baseline``).
+    """
+    pm = pm or PowerModel()
+    policies = dict(policies) if policies is not None \
+        else default_policy_grid()
+    specs = resolve(scenarios, n_nodes)
+    traces = {name: build_trace(spec, topo) for name, spec in specs.items()}
+    base_key = unused_key(policies)
+    grid = sweep_scenarios(traces, topo,
+                           {base_key: _BASELINE_POLICY, **policies},
+                           pm, max_group=max_group)
+    out: Dict[str, Dict[str, dict]] = {}
+    for sc, res in grid.items():
+        base = res.pop(base_key)
+        out[sc] = relative_rows(base, res, baseline)
+    return out
+
+
+CSV_FIELDS = ("makespan", "exec_overhead_pct", "mean_latency",
+              "latency_overhead_pct", "link_energy", "total_energy",
+              "energy_saved_pct", "link_energy_saved_pct", "asleep_frac")
+
+
+def table_rows(results: Dict[str, Dict[str, dict]]):
+    """Flatten suite results to CSV-ready dict rows."""
+    for sc, rows in results.items():
+        for pol, r in rows.items():
+            yield {"scenario": sc, "policy": pol,
+                   **{k: r[k] for k in CSV_FIELDS}}
+
+
+def format_table(results: Dict[str, Dict[str, dict]]) -> str:
+    """Human-readable per-scenario energy/degradation tables."""
+    lines = []
+    for sc, rows in results.items():
+        lines.append(f"== {sc}")
+        lines.append(f"  {'policy':<16} {'makespan':>11} {'overhead%':>10} "
+                     f"{'energy_J':>12} {'saved%':>8} {'link_saved%':>12} "
+                     f"{'asleep%':>8}")
+        for pol, r in rows.items():
+            lines.append(
+                f"  {pol:<16} {r['makespan']:>11.5g} "
+                f"{r['exec_overhead_pct']:>10.2f} "
+                f"{r['total_energy']:>12.5g} "
+                f"{r['energy_saved_pct']:>8.2f} "
+                f"{r['link_energy_saved_pct']:>12.2f} "
+                f"{100 * r['asleep_frac']:>8.2f}")
+    return "\n".join(lines)

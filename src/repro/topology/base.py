@@ -44,6 +44,15 @@ class RoutedTopology:
     def routes(self, src, dst):
         raise NotImplementedError
 
+    def signature(self) -> tuple:
+        """Shape signature ``(n_nodes, n_links, max_hops)`` — the part of a
+        topology that determines compiled replay-program shapes.  The plan
+        compiler copies it into every ``TracePlan`` (via
+        ``plan.topo_signature``), and ``plan.plan_shape_key`` compares those
+        fields when deciding whether plans stack along the multi-trace
+        axis."""
+        return (self.n_nodes, self.n_links, self.max_hops)
+
     def routes_cached(self, src, dst):
         """Memoized ``routes()``.  Returned arrays are shared across cache
         hits — do not mutate them."""

@@ -29,10 +29,26 @@ from repro.traffic.trace import Step, Trace
 FORMAT_VERSION = 1
 
 
+def _split_steps(steps):
+    """Normalize to single-phase steps: a Step carrying BOTH compute and
+    messages (legal in the data model — phase fusion produces them) splits
+    into compute-then-messages, the exact replay order of the fused form,
+    so the on-disk single-phase encoding loses nothing."""
+    for s in steps:
+        has_c = s.compute_nodes is not None and len(s.compute_nodes)
+        has_m = s.msgs is not None and len(s.msgs)
+        if has_c and (has_m or s.barrier):
+            yield Step(compute_nodes=s.compute_nodes,
+                       compute_secs=s.compute_secs)
+            yield Step(msgs=s.msgs if has_m else None, barrier=s.barrier)
+        else:
+            yield s
+
+
 def save_trace(path, trace: Trace) -> None:
     kinds, comp_ptr, comp_node, comp_secs = [], [0], [], []
     msg_ptr, msgs, msg_barrier = [0], [], []
-    for s in trace.steps:
+    for s in _split_steps(trace.steps):
         if s.compute_nodes is not None and len(s.compute_nodes):
             kinds.append(0)
             comp_node.append(np.asarray(s.compute_nodes, np.int64))

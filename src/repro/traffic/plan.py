@@ -233,9 +233,17 @@ def _stack_segment(steps: List[_HostStep], cap: int, n_nodes: int,
     return PlanSegment(cap=cap, n_steps=S, xs=xs, host_has_msgs=has_msgs)
 
 
+def topo_signature(topo) -> tuple:
+    """``(n_nodes, n_links, max_hops)`` — the topology part of a plan's
+    compiled shape (``RoutedTopology.signature`` when available)."""
+    if hasattr(topo, "signature"):
+        return topo.signature()
+    return (topo.n_nodes, topo.n_links, topo.max_hops)
+
+
 def _compile(trace, topo, bucket_min: int) -> TracePlan:
     steps = _lower_steps(trace)
-    H = topo.max_hops
+    n_nodes, n_links, H = topo_signature(topo)
 
     # ---- one batched route lookup for the whole trace -------------------
     msg_steps = [ps for ps in steps if ps.msgs is not None]
@@ -280,7 +288,7 @@ def _compile(trace, topo, bucket_min: int) -> TracePlan:
         cap_bucket[cap] = max(cap_bucket.get(cap, 0),
                               step_bucket(len(seg_steps)))
     segments = [
-        _stack_segment(seg_steps, cap, topo.n_nodes, routed, H,
+        _stack_segment(seg_steps, cap, n_nodes, routed, H,
                        min(cap_bucket[cap],
                            MAX_STEP_PAD * step_bucket(len(seg_steps))))
         for seg_steps, cap in runs]
@@ -292,11 +300,11 @@ def _compile(trace, topo, bucket_min: int) -> TracePlan:
         if st.compute_nodes is not None and len(st.compute_nodes):
             busy += float(st.compute_secs.sum())
 
-    part_mask = np.zeros(topo.n_nodes, bool)
+    part_mask = np.zeros(n_nodes, bool)
     part_mask[np.asarray(trace.nodes, np.int64)] = True
 
     return TracePlan(
-        n_nodes=topo.n_nodes, n_links=topo.n_links, max_hops=H,
+        n_nodes=n_nodes, n_links=n_links, max_hops=H,
         part_mask=jnp.asarray(part_mask),
         has_participants=len(trace.nodes) > 0,
         busy=busy, n_msgs=int(trace.n_messages),
@@ -345,3 +353,100 @@ def plan_cache_clear() -> None:
 def plan_cache_info() -> dict:
     return {"traces": len(_PLAN_CACHE),
             "plans": sum(len(e[2]) for e in _PLAN_CACHE.values())}
+
+
+# ---------------------------------------------------------------------------
+# Multi-trace stacking: same-shape plans batch along a second vmapped axis
+# ---------------------------------------------------------------------------
+
+
+def plan_shape_key(plan: TracePlan) -> tuple:
+    """Compiled-shape signature of a plan: topology shape + the per-segment
+    ``(cap, S_pad)`` schedule.  Two plans with equal keys lower to identical
+    executor programs, so they can stack along a leading trace axis and a
+    (scenarios x policies) grid replays in ONE compiled scan per segment
+    shape instead of one per (scenario, policy-group)."""
+    return (plan.n_nodes, plan.n_links, plan.max_hops, plan.bucket_min,
+            tuple((s.cap, int(s.xs["delta"].shape[0]))
+                  for s in plan.segments))
+
+
+@dataclass
+class PlanBatch:
+    """T same-shape TracePlans stacked along a leading trace axis.
+
+    Mirrors :class:`TracePlan` with every device array gaining a leading
+    ``T`` dim: segment ``xs`` arrays are ``(T, S_pad, ...)`` and
+    ``part_mask`` is ``(T, n_nodes)``.  Host bookkeeping (``busy``,
+    ``n_msgs``, participant flags) becomes per-trace numpy vectors.  The
+    executor (``repro.core.replay``) vmaps its per-trace program over this
+    axis, so one compiled program serves the whole (trace, policy) grid of
+    a segment shape.
+    """
+    n_nodes: int
+    n_links: int
+    max_hops: int
+    part_mask: jnp.ndarray               # (T, n_nodes) bool
+    has_participants: np.ndarray         # (T,) bool, host
+    busy: np.ndarray                     # (T,) f64, host
+    n_msgs: np.ndarray                   # (T,) i64, host
+    segments: List[PlanSegment]          # xs arrays lead with T
+    names: List[str]
+    bucket_min: int = BUCKET_MIN
+
+    @property
+    def n_traces(self) -> int:
+        return len(self.names)
+
+    def describe(self) -> str:
+        caps = [f"{s.cap}x{s.n_steps}" for s in self.segments]
+        return (f"PlanBatch({self.n_traces} traces "
+                f"[{', '.join(self.names)}]: segments [{', '.join(caps)}])")
+
+
+def stack_plans(plans: List[TracePlan], names: Optional[List[str]] = None
+                ) -> PlanBatch:
+    """Stack same-shape plans into one :class:`PlanBatch`.
+
+    All plans must share ``plan_shape_key`` (same topology shape and the
+    same per-segment ``(cap, S_pad)`` schedule) — use ``group_stackable``
+    to partition an arbitrary plan list first.  A single plan stacks into
+    a T=1 batch, so callers can route everything through the multi-trace
+    executor unconditionally.
+    """
+    assert plans, "stack_plans needs at least one plan"
+    key0 = plan_shape_key(plans[0])
+    for p in plans[1:]:
+        assert plan_shape_key(p) == key0, \
+            f"cannot stack plans with different shapes: " \
+            f"{plan_shape_key(p)} vs {key0}"
+    names = list(names) if names is not None \
+        else [p.name or f"trace{i}" for i, p in enumerate(plans)]
+    segments = []
+    for si, seg0 in enumerate(plans[0].segments):
+        xs = {k: jnp.stack([p.segments[si].xs[k] for p in plans])
+              for k in seg0.xs}
+        host_has = np.stack([p.segments[si].host_has_msgs
+                             for p in plans]) \
+            if seg0.host_has_msgs is not None else None
+        segments.append(PlanSegment(
+            cap=seg0.cap,
+            n_steps=max(p.segments[si].n_steps for p in plans),
+            xs=xs, host_has_msgs=host_has))
+    return PlanBatch(
+        n_nodes=plans[0].n_nodes, n_links=plans[0].n_links,
+        max_hops=plans[0].max_hops,
+        part_mask=jnp.stack([p.part_mask for p in plans]),
+        has_participants=np.asarray([p.has_participants for p in plans]),
+        busy=np.asarray([p.busy for p in plans], np.float64),
+        n_msgs=np.asarray([p.n_msgs for p in plans], np.int64),
+        segments=segments, names=names, bucket_min=plans[0].bucket_min)
+
+
+def group_stackable(plans: List[TracePlan]) -> List[List[int]]:
+    """Partition plan indices into stackable groups (equal
+    ``plan_shape_key``), preserving first-seen order."""
+    groups: dict = {}
+    for i, p in enumerate(plans):
+        groups.setdefault(plan_shape_key(p), []).append(i)
+    return list(groups.values())

@@ -1,0 +1,231 @@
+"""Scenario engine: catalog coverage, seeded determinism, plan-shape
+stacking, and the multi-trace batched grid — equivalence with the
+per-trace engines (compiled serial AND step-loop reference) plus the
+program-count bound, in the style of tests/test_plan.py."""
+import numpy as np
+import pytest
+
+from repro import scenarios as SC
+from repro.core import simulator as S
+from repro.core.eee import Policy, PowerModel
+from repro.core.instrument import count_compiles
+from repro.core.sweep import group_policies, sweep_policies, sweep_scenarios
+from repro.scenarios.ml import derive_grid
+from repro.topology.megafly import small_topology
+from repro.traffic import plan as P
+
+PM = PowerModel()
+# 12-node Megafly: big enough for 8-node allocations, fast to replay
+TINY = small_topology(n_groups=3, leaves=2, spines=2, nodes_per_leaf=2)
+
+DC_NAMES = ["dc-poisson", "dc-hotspot", "dc-onoff", "dc-incast"]
+
+GRID = {
+    "fw": Policy(kind="fixed", t_pdt=1e-5, sleep_state="fast_wake"),
+    "ds": Policy(kind="fixed", t_pdt=1e-4, sleep_state="deep_sleep"),
+    "pb1": Policy(kind="perfbound", bound=0.01),
+    "pb5": Policy(kind="perfbound", bound=0.05),
+}
+
+
+def _dc_traces(n_nodes=8):
+    return {n: SC.build_trace(SC.get_scenario(n).scaled(n_nodes), TINY)
+            for n in DC_NAMES}
+
+
+# ---------------------------------------------------------------------------
+# Catalog + determinism
+# ---------------------------------------------------------------------------
+
+
+def test_catalog_coverage():
+    names = SC.list_scenarios()
+    assert len(names) >= 8
+    for family, n_min in (("ml", 2), ("hpc", 2), ("dc", 2)):
+        assert len(SC.list_scenarios(family)) >= n_min, family
+    for name in names:
+        assert SC.get_scenario(name).description
+
+
+def _steps_equal(a, b):
+    assert len(a.steps) == len(b.steps)
+    for sa, sb in zip(a.steps, b.steps):
+        assert sa.barrier == sb.barrier
+        for f in ("compute_nodes", "compute_secs", "msgs"):
+            x, y = getattr(sa, f), getattr(sb, f)
+            assert (x is None) == (y is None)
+            if x is not None:
+                assert np.asarray(x).dtype == np.asarray(y).dtype
+                np.testing.assert_array_equal(x, y)
+
+
+@pytest.mark.parametrize("name", sorted(SC.catalog()))
+def test_same_seed_same_trace(name):
+    """Scenario synthesis is a pure function of (spec, topology): rebuilding
+    with the cache cleared reproduces every step bit-identically."""
+    spec = SC.get_scenario(name).scaled(8)
+    t1 = SC.build_trace(spec, TINY)
+    SC.trace_cache_clear()
+    t2 = SC.build_trace(spec, TINY)
+    assert t1 is not t2
+    np.testing.assert_array_equal(t1.nodes, t2.nodes)
+    _steps_equal(t1, t2)
+
+
+def test_seed_changes_stochastic_traces():
+    spec = SC.get_scenario("dc-poisson").scaled(8)
+    t1 = SC.build_trace(spec, TINY)
+    t2 = SC.build_trace(spec.scaled(8, seed=spec.seed + 1), TINY)
+    diff = any(
+        (a.msgs is None) != (b.msgs is None)
+        or (a.msgs is not None and (a.msgs.shape != b.msgs.shape
+                                    or not np.array_equal(a.msgs, b.msgs)))
+        for a, b in zip(t1.steps, t2.steps)) or len(t1.steps) != len(t2.steps)
+    assert diff, "reseeding left the stochastic trace unchanged"
+
+
+def test_trace_cache_identity():
+    """Equal spec values share ONE trace (keeps the plan cache keyed per
+    scenario); different values do not."""
+    spec = SC.get_scenario("dc-onoff").scaled(8)
+    t1 = SC.build_trace(spec, TINY)
+    assert SC.build_trace(SC.get_scenario("dc-onoff").scaled(8), TINY) is t1
+    assert SC.build_trace(spec.scaled(8, seed=99), TINY) is not t1
+
+
+def test_incast_fan_in_at_flow_cap():
+    """fan_in >= max_flows must not crash (background trickle clamps to
+    zero, it cannot go negative) and the fan-in itself survives."""
+    spec = SC.Scenario("t-incast-wide", "dc", "incast", 8, seed=7,
+                       params=SC.params_of(fan_in=7, max_flows=7,
+                                           windows=4))
+    tr = SC.build_trace(spec, TINY)
+    msg_steps = [s for s in tr.steps if s.msgs is not None]
+    assert len(msg_steps) == 4
+    assert all(len(s.msgs) == 7 for s in msg_steps)
+
+
+def test_ml_grid_derivation():
+    assert derive_grid(8) == (4, 2, 1)
+    assert derive_grid(16) == (4, 2, 2)
+    assert derive_grid(16, dp=2, tp=4, pp=2) == (2, 4, 2)
+    with pytest.raises(AssertionError):
+        derive_grid(12)
+    with pytest.raises(AssertionError):
+        derive_grid(16, dp=3, tp=2, pp=2)
+
+
+# ---------------------------------------------------------------------------
+# Plan stacking
+# ---------------------------------------------------------------------------
+
+
+def test_dc_family_shares_plan_shape():
+    """The whole dc-* family lowers to one plan shape by construction, so
+    it stacks along the multi-trace axis."""
+    plans = [P.compile_plan(tr, TINY) for tr in _dc_traces().values()]
+    keys = {P.plan_shape_key(p) for p in plans}
+    assert len(keys) == 1
+    batch = P.stack_plans(plans, names=DC_NAMES)
+    assert batch.n_traces == 4 and batch.names == DC_NAMES
+    [seg] = batch.segments
+    assert np.asarray(seg.xs["delta"]).shape[0] == 4   # leading T axis
+    assert P.group_stackable(plans) == [[0, 1, 2, 3]]
+
+
+def test_stack_rejects_shape_mismatch():
+    traces = _dc_traces()
+    pdc = P.compile_plan(traces["dc-poisson"], TINY)
+    pml = P.compile_plan(
+        SC.build_trace(SC.get_scenario("ml-qwen2-1.5b").scaled(8), TINY),
+        TINY)
+    assert P.plan_shape_key(pdc) != P.plan_shape_key(pml)
+    with pytest.raises(AssertionError, match="different shapes"):
+        P.stack_plans([pdc, pml])
+
+
+# ---------------------------------------------------------------------------
+# Multi-trace batched grid: equivalence + program-count bound
+# ---------------------------------------------------------------------------
+
+
+def test_grid_matches_serial_bit_identical_and_compiles_fewer():
+    """The acceptance gate: a (4 scenarios x 4 policies) grid through the
+    batched multi-trace path is bit-identical to per-trace
+    ``simulate_trace`` while compiling fewer programs than
+    scenarios x policy-groups."""
+    traces = _dc_traces()
+    n_groups = len(group_policies(GRID))
+    assert n_groups == 2
+    # warm the per-policy machinery (B-lane init ops, single-trace
+    # programs) so the counter below sees only the grid path's programs
+    sweep_policies(traces["dc-poisson"], TINY, GRID, PM)
+    want = {(tn, pn): S.simulate_trace(tr, TINY, pol, PM)[0]
+            for tn, tr in traces.items() for pn, pol in GRID.items()}
+    with count_compiles() as cc:
+        got = sweep_scenarios(traces, TINY, GRID, PM)
+    for tn in traces:
+        for pn in GRID:
+            assert got[tn][pn].as_dict() == want[(tn, pn)].as_dict(), \
+                f"{tn}/{pn} diverged from serial replay"
+    assert cc.count < len(traces) * n_groups, \
+        f"{cc.count} compiles >= {len(traces)} x {n_groups}"
+
+
+def test_grid_matches_step_loop_reference():
+    """Multi-trace batched replay against the semantic oracle (the host
+    step-loop), as tests/test_plan.py does for the single-trace path."""
+    names = ["dc-poisson", "dc-onoff"]
+    traces = {n: SC.build_trace(SC.get_scenario(n).scaled(8), TINY)
+              for n in names}
+    pols = {"ds": GRID["ds"], "pb1": GRID["pb1"]}
+    got = sweep_scenarios(traces, TINY, pols, PM)
+    for tn, tr in traces.items():
+        for pn, pol in pols.items():
+            want, _ = S.simulate_trace_reference(tr, TINY, pol, PM)
+            g, w = got[tn][pn].as_dict(), want.as_dict()
+            for k in w:
+                np.testing.assert_allclose(g[k], w[k], rtol=1e-9,
+                                           atol=1e-12,
+                                           err_msg=f"{tn}/{pn}.{k}")
+
+
+def test_mixed_shape_grid_covers_all_cells():
+    """Scenarios that do NOT share a plan shape still sweep through
+    ``sweep_scenarios`` (separate stacks), matching serial results."""
+    traces = {
+        "dc-poisson": SC.build_trace(
+            SC.get_scenario("dc-poisson").scaled(8), TINY),
+        "hpc-spectral": SC.build_trace(
+            SC.get_scenario("hpc-spectral").scaled(8), TINY),
+    }
+    pols = {"fw": GRID["fw"], "ds": GRID["ds"]}
+    got = sweep_scenarios(traces, TINY, pols, PM)
+    for tn, tr in traces.items():
+        for pn, pol in pols.items():
+            want, _ = S.simulate_trace(tr, TINY, pol, PM)
+            assert got[tn][pn].as_dict() == want.as_dict(), f"{tn}/{pn}"
+
+
+# ---------------------------------------------------------------------------
+# Suite runner
+# ---------------------------------------------------------------------------
+
+
+def test_run_suite_reports_relative_to_baseline():
+    res = SC.run_suite(TINY, scenarios=["dc-poisson", "dc-onoff"],
+                       policies={"ds": GRID["ds"], "pb1": GRID["pb1"]},
+                       n_nodes=8)
+    assert set(res) == {"dc-poisson", "dc-onoff"}
+    for sc, rows in res.items():
+        assert set(rows) == {"baseline", "ds", "pb1"}
+        assert rows["baseline"]["exec_overhead_pct"] == 0.0
+        assert rows["baseline"]["energy_saved_pct"] == 0.0
+        for pn in ("ds", "pb1"):
+            assert rows[pn]["makespan"] >= rows["baseline"]["makespan"]
+            assert 0.0 < rows[pn]["link_energy_saved_pct"] <= 100.0
+    table = SC.format_table(res)
+    assert "dc-poisson" in table and "baseline" in table
+    rows = list(SC.table_rows(res))
+    assert len(rows) == 2 * 3
+    assert {"scenario", "policy", "energy_saved_pct"} <= set(rows[0])

@@ -2,11 +2,12 @@
 import numpy as np
 import pytest
 
+from repro import scenarios as SC
 from repro.core.eee import Policy
-from repro.core.simulator import simulate_trace
+from repro.core.simulator import simulate_trace, simulate_trace_reference
 from repro.traffic.generators import small_apps
 from repro.traffic.io import load_trace, save_trace
-from repro.traffic.trace import Trace
+from repro.traffic.trace import Step, Trace
 
 
 @pytest.mark.parametrize("app", ["lammps", "patmos", "mlwf", "alexnet"])
@@ -47,6 +48,69 @@ def test_barrier_only_steps(tmp_path):
     tr2 = load_trace(p)
     assert tr2.steps[1].barrier and tr2.steps[1].msgs is None
     assert tr2.steps[2].barrier and len(tr2.steps[2].msgs) == 1
+
+
+@pytest.mark.parametrize("name", sorted(SC.catalog()))
+def test_scenario_roundtrip_structure(tmp_path, topo, name):
+    """Every synthesized scenario survives save/load with bit-identical
+    steps, dtypes and metadata (the builder API emits only single-phase
+    steps, so nothing is split or dropped)."""
+    tr = SC.build_trace(SC.get_scenario(name).scaled(8), topo)
+    p = tmp_path / "s.npz"
+    save_trace(p, tr)
+    tr2 = load_trace(p)
+    assert tr2.name == tr.name
+    assert tr2.nodes.dtype == tr.nodes.dtype == np.int64
+    np.testing.assert_array_equal(tr2.nodes, tr.nodes)
+    assert len(tr2.steps) == len(tr.steps)
+    for i, (a, b) in enumerate(zip(tr.steps, tr2.steps)):
+        assert a.barrier == b.barrier, i
+        for f in ("compute_nodes", "compute_secs", "msgs"):
+            x, y = getattr(a, f), getattr(b, f)
+            assert (x is None) == (y is None), (i, f)
+            if x is not None:
+                assert np.asarray(x).dtype == np.asarray(y).dtype, (i, f)
+                np.testing.assert_array_equal(x, y, err_msg=f"step{i}.{f}")
+
+
+@pytest.mark.parametrize("name",
+                         ["ml-qwen2-1.5b", "dc-onoff", "hpc-spectral"])
+def test_scenario_roundtrip_replays_identically(tmp_path, topo, pm, name):
+    """Bit-identical replay stats for a loaded scenario trace — one
+    representative per synthesized family."""
+    tr = SC.build_trace(SC.get_scenario(name).scaled(8), topo)
+    p = tmp_path / "s.npz"
+    save_trace(p, tr)
+    tr2 = load_trace(p)
+    pol = Policy(kind="fixed", t_pdt=5e-5, sleep_state="deep_sleep")
+    r1, _ = simulate_trace(tr, topo, pol, pm)
+    r2, _ = simulate_trace(tr2, topo, pol, pm)
+    assert r1.as_dict() == r2.as_dict()
+
+
+def test_fused_step_splits_on_save(tmp_path, topo, pm):
+    """A Step carrying compute AND messages (legal in the data model; the
+    old encoder silently dropped its message/barrier phases) saves as
+    compute-then-messages — identical replay order, nothing lost."""
+    nodes = np.arange(6, dtype=np.int64)
+    tr = Trace(nodes=nodes, name="fused")
+    tr.steps.append(Step(compute_nodes=nodes.copy(),
+                         compute_secs=np.full(6, 1e-3),
+                         msgs=np.array([[0, 3, 4096], [1, 4, 512]],
+                                       np.int64),
+                         barrier=True))
+    tr.steps.append(Step(compute_nodes=nodes.copy(),
+                         compute_secs=np.full(6, 2e-3), barrier=True))
+    tr.messages([[2, 5, 1024]], barrier=True)
+    p = tmp_path / "f.npz"
+    save_trace(p, tr)
+    tr2 = load_trace(p)
+    assert tr2.n_messages == tr.n_messages == 3
+    assert len(tr2.steps) == 5                    # both fused steps split
+    pol = Policy(kind="fixed", t_pdt=1e-5, sleep_state="fast_wake")
+    r1, _ = simulate_trace_reference(tr, topo, pol, pm)
+    r2, _ = simulate_trace_reference(tr2, topo, pol, pm)
+    assert r1.as_dict() == r2.as_dict()
 
 
 def test_version_check(tmp_path):
