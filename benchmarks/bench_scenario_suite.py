@@ -30,6 +30,9 @@ def _grid(scale: str) -> dict:
             "fixed-ds-100us": Policy(kind="fixed", t_pdt=1e-4,
                                      sleep_state="deep_sleep"),
             "perfbound-1pct": Policy(kind="perfbound", bound=0.01),
+            "dual-10us-200us": Policy(kind="dual", t_pdt=1e-5, t_dst=2e-4,
+                                      sleep_state="fast_wake",
+                                      deep_state="deep_sleep"),
         }
     return SC.default_policy_grid()
 

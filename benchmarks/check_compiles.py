@@ -1,0 +1,106 @@
+"""Compile-count regression guard for the bench-smoke CI jobs.
+
+Compares the warm-pass backend-compile counts recorded in fresh
+``BENCH_<name>.json`` files (written by ``benchmarks.run --warm
+--json-dir``) against the committed baselines and fails on growth — a warm
+pass that suddenly compiles is a broken plan/program cache, the exact
+regression class the compiled-pipeline work exists to prevent.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.check_compiles --json-dir DIR \
+      [--scale tiny] [--baseline benchmarks/baselines/compile_counts.json] \
+      [--update]
+
+``--update`` rewrites the baseline from the fresh records (commit the
+result when a legitimate change moves a count DOWN or adds a bench).
+Shrinking counts only warn, so improvements don't block CI but show up in
+the log for a baseline refresh.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                                "compile_counts.json")
+
+
+def load_records(json_dir: str) -> dict:
+    """{bench: record} from every BENCH_*.json in ``json_dir``."""
+    records = {}
+    for path in sorted(glob.glob(os.path.join(json_dir, "BENCH_*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        records[rec["bench"]] = rec
+    return records
+
+
+def check(records: dict, baseline: dict, scale: str):
+    """Returns (failures, warnings, fresh-count dict for ``scale``)."""
+    failures, warnings, fresh = [], [], {}
+    base_scale = baseline.get(scale, {})
+    for bench, rec in records.items():
+        if rec.get("scale") != scale:
+            warnings.append(f"{bench}: record is scale={rec.get('scale')!r},"
+                            f" expected {scale!r} — skipped")
+            continue
+        warm = rec.get("compiles_warm")
+        if warm is None:
+            failures.append(f"{bench}: no warm pass in record "
+                            f"(run benchmarks.run with --warm)")
+            continue
+        fresh[bench] = warm
+        want = base_scale.get(bench)
+        if want is None:
+            warnings.append(f"{bench}: no committed baseline "
+                            f"(warm compiles = {warm}); add with --update")
+        elif warm > want:
+            failures.append(f"{bench}: warm compiles grew {want} -> {warm}")
+        elif warm < want:
+            warnings.append(f"{bench}: warm compiles shrank {want} -> "
+                            f"{warm}; refresh the baseline with --update")
+    return failures, warnings, fresh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", required=True,
+                    help="directory holding fresh BENCH_*.json records")
+    ap.add_argument("--scale", default="tiny",
+                    help="bench scale the records must match")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh records")
+    args = ap.parse_args()
+
+    records = load_records(args.json_dir)
+    if not records:
+        sys.exit(f"no BENCH_*.json records under {args.json_dir}")
+    baseline = {}
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+
+    failures, warnings, fresh = check(records, baseline, args.scale)
+    for w in warnings:
+        print(f"WARN  {w}")
+    if args.update:
+        baseline.setdefault(args.scale, {}).update(fresh)
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"updated {args.baseline}: {baseline[args.scale]}")
+        return
+    for msg in failures:
+        print(f"FAIL  {msg}")
+    if failures:
+        sys.exit(1)
+    print(f"compile counts OK for {sorted(fresh)} at scale={args.scale}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,8 +44,10 @@ def get_topo(scale):
 
 
 def dense_grid():
-    """Beyond-default: 10-point fixed t_PDT curve x 2 sleep states plus a
-    4-point bound curve for both adaptive predictors."""
+    """Beyond-default: 10-point fixed t_PDT curve x 2 sleep states, a
+    4-point bound curve for the three adaptive predictors, a 6-point
+    demotion-timer curve for the dual-mode ladder, and a 4-point
+    coalescing-window curve — one batched replay per kind."""
     grid = {}
     for st in ("fast_wake", "deep_sleep"):
         for t in np.geomspace(1e-6, 1e-2, 10):
@@ -54,6 +56,18 @@ def dense_grid():
     for b in (0.005, 0.01, 0.02, 0.05):
         grid[f"pb-{b:g}"] = Policy(kind="perfbound", bound=b)
         grid[f"pbc-{b:g}"] = Policy(kind="perfbound_correct", bound=b)
+        grid[f"pbd-{b:g}"] = Policy(kind="perfbound_dual", bound=b,
+                                    sleep_state="fast_wake",
+                                    deep_state="deep_sleep")
+    for td in np.geomspace(2e-5, 2e-3, 6):
+        grid[f"dual-{td:.2g}"] = Policy(
+            kind="dual", t_pdt=1e-5, t_dst=float(td),
+            sleep_state="fast_wake", deep_state="deep_sleep")
+    for md in np.geomspace(1e-5, 1e-3, 4):
+        grid[f"coalesce-{md:.2g}"] = Policy(
+            kind="coalesce", t_pdt=1e-5, t_dst=2e-4, max_delay=float(md),
+            max_frames=16, sleep_state="fast_wake",
+            deep_state="deep_sleep")
     return grid
 
 

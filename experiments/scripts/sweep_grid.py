@@ -47,6 +47,21 @@ for st in ("fast_wake", "deep_sleep"):
         for kind, tag in (("perfbound", "pb"), ("perfbound_correct", "pbc")):
             grid[f"{tag},{st},{b:.3g}"] = Policy(kind=kind, bound=float(b),
                                                  sleep_state=st)
+# dual-mode FSM curves (DESIGN.md §6): demotion-timer sweep, coalescing
+# window sweep, and the adaptive-demotion bound curve — the Fast Wake ->
+# Deep Sleep ladder the single-state grid above cannot express
+for td in np.geomspace(1e-5, 1e-2, 8):
+    grid[f"dual,fw>ds,{td:.3g}"] = Policy(
+        kind="dual", t_pdt=1e-5, t_dst=float(td), sleep_state="fast_wake",
+        deep_state="deep_sleep")
+for md in np.geomspace(1e-5, 1e-3, 6):
+    grid[f"coalesce,fw>ds,{md:.3g}"] = Policy(
+        kind="coalesce", t_pdt=1e-5, t_dst=2e-4, max_delay=float(md),
+        max_frames=16, sleep_state="fast_wake", deep_state="deep_sleep")
+for b in np.geomspace(0.002, 0.2, 8):
+    grid[f"pbd,fw>ds,{b:.3g}"] = Policy(
+        kind="perfbound_dual", bound=float(b), sleep_state="fast_wake",
+        deep_state="deep_sleep")
 
 print(f"# {len(grid)} grid cells in {len(group_policies(grid))} batched "
       f"groups", flush=True)

@@ -62,18 +62,26 @@ def events_to_streams(events, n_links, t_end):
 
 def evaluate_fixed(gaps, durs, tail, t_pdt, policy: Policy,
                    pm: PowerModel, use_ref=False):
-    """Evaluate a per-port (or scalar) t_PDT assignment.  Returns dict."""
+    """Evaluate a per-port (or scalar) t_PDT assignment.  Returns dict.
+
+    Dual-capable policies (``dual``/``coalesce``/``perfbound_dual``)
+    evaluate the two-row ladder: gaps outlasting the demotion timer land
+    in the deep row's time/energy accounts.
+    """
     P = gaps.shape[1]
     tpdt = jnp.broadcast_to(jnp.asarray(t_pdt, jnp.float32), (P,))
-    st = policy.state
+    st, st2 = policy.state, policy.deep
+    t_dst = policy.t_dst if policy.dual_capable else float("inf")
     out = ops.port_energy_op(gaps, durs, tpdt, tail, t_w=st.t_w, t_s=st.t_s,
+                             t_w2=st2.t_w, t_s2=st2.t_s, t_dst=t_dst,
                              use_ref=use_ref)
-    frac = st.power_frac
-    link_energy = 2 * pm.port_power * (out["time_wake"].sum()
-                                       + frac * out["time_sleep"].sum())
+    link_energy = 2 * pm.port_power * (
+        out["time_wake"].sum() + st.power_frac * out["time_sleep"].sum()
+        + st2.power_frac * out["time_sleep2"].sum())
     return dict(out, link_energy=float(link_energy),
                 wake_time=float(out["time_wake"].sum()),
-                sleep_time=float(out["time_sleep"].sum()))
+                sleep_time=float(out["time_sleep"].sum()),
+                sleep2_time=float(out["time_sleep2"].sum()))
 
 
 def perfbound_snapshot_tpdt(gaps, t_elapsed, hop_mean, policy: Policy,

@@ -15,7 +15,9 @@ class LinkState:
     power_frac: float     # link power in this state / wake power
 
     def __post_init__(self):
-        assert self.t_w > 0 and self.t_s > 0 and 0 < self.power_frac < 1
+        # power_frac == 0 is a true off state (beyond 802.3bj, but the
+        # FSM lowers it like any other row); >= 1 would never save energy
+        assert self.t_w > 0 and self.t_s > 0 and 0 <= self.power_frac < 1
 
 
 # Table 6 values (derived from EEE / 802.3bj, Table 3)
@@ -35,12 +37,32 @@ class Policy:
                          histogram, degradation bound ``bound`` (§2.5 [28]).
       * ``perfbound_correct`` — PerfBound + miss-ratio corrective factor
                          (§3.4, the paper's contribution).
+      * ``dual``       — two-level sleep ladder (DESIGN.md §6): fixed
+                         ``t_pdt`` drops the port into ``sleep_state``
+                         (Fast Wake), a second timer ``t_dst`` demotes it
+                         to ``deep_state`` (Deep Sleep).
+      * ``coalesce``   — the dual ladder plus frame coalescing: the frame
+                         that would wake a sleeping port is held up to
+                         ``max_delay`` (early release once ~``max_frames``
+                         frames queue), so the port sleeps through bursts.
+      * ``perfbound_dual`` — the paper-enhancement ladder: PerfBound
+                         drives t_PDT as usual AND selects the per-port
+                         demotion threshold from the same histograms, so
+                         deep sleep engages only where the predicted
+                         residual idle amortizes its extra wake penalty.
     hist_mode: ``keep_all`` | ``self_clear`` | ``circular`` (§3.2/§4).
     """
     kind: str = "none"
     sleep_state: str = "deep_sleep"
     t_pdt: float = 0.0
     bound: float = 0.01
+    # -- dual-mode sleep ladder (dual / coalesce / perfbound_dual) ---------
+    deep_state: str = "deep_sleep"    # second FSM row (lowers to numbers)
+    t_dst: float = 1e-3               # demotion timer after sleep onset (s);
+    #                                   perfbound_dual: initial threshold
+    # -- frame coalescing (kind == "coalesce") -----------------------------
+    max_delay: float = 0.0            # max wake deferral per sleep cycle (s)
+    max_frames: int = 32              # queue bound: est. early-wake trigger
     hist_mode: str = "keep_all"
     hist_bins: int = 200
     hist_bin_width: float = 10e-6     # seconds/bin (linear binning)
@@ -61,21 +83,42 @@ class Policy:
     record_hist: bool = False         # record gaps even for none/fixed (Fig 1)
 
     def __post_init__(self):
-        assert self.kind in ("none", "fixed", "perfbound", "perfbound_correct")
+        assert self.kind in ("none", "fixed", "perfbound", "perfbound_correct",
+                             "dual", "coalesce", "perfbound_dual")
         assert self.sleep_state in EEE_STATES
+        assert self.deep_state in EEE_STATES
         assert self.hist_mode in ("keep_all", "self_clear", "circular")
         assert 1 <= self.n_r <= 32
         assert 0.0 < self.hist_decay <= 1.0
         assert self.hist_decay == 1.0 or self.hist_mode == "keep_all", \
             "recency decay composes with keep_all histograms only"
+        if self.dual_capable:
+            # the ladder must descend: the deep row may only trade a longer
+            # wake for a lower power floor
+            assert self.deep.t_w >= self.state.t_w \
+                and self.deep.power_frac <= self.state.power_frac, \
+                "deep_state must not dominate sleep_state"
+            assert self.t_dst >= 0.0
+        assert self.max_delay >= 0.0 and self.max_frames >= 1
 
     @property
     def state(self) -> LinkState:
         return EEE_STATES[self.sleep_state]
 
     @property
+    def deep(self) -> LinkState:
+        """The demotion target row (unreachable for single-state kinds)."""
+        return EEE_STATES[self.deep_state]
+
+    @property
     def adaptive(self) -> bool:
-        return self.kind in ("perfbound", "perfbound_correct")
+        return self.kind in ("perfbound", "perfbound_correct",
+                             "perfbound_dual")
+
+    @property
+    def dual_capable(self) -> bool:
+        """Kinds whose FSM can reach the deep row (second sleep state)."""
+        return self.kind in ("dual", "coalesce", "perfbound_dual")
 
 
 # ---------------------------------------------------------------------------
@@ -89,12 +132,22 @@ class Policy:
 #     batched scan (see repro.core.sweep).
 #   * NUMERIC parameters — plain floats the compiled code reads from a
 #     parameter vector: timers, bounds, transition times, bin geometry.
-#     ``sleep_state`` deliberately lowers to numbers (t_w/t_s/power_frac),
-#     so Fast Wake and Deep Sleep variants batch together.
+#     ``sleep_state`` deliberately lowers to numbers (t_w/t_s/power_frac) —
+#     and ``deep_state`` to (t_w2/t_s2/power_frac2), the second row of the
+#     FSM state table — so Fast Wake / Deep Sleep / ladder variants of one
+#     kind batch together.
+
+# Policy fields that lower to derived numerics rather than appearing in the
+# parameter vector under their own name (see policy_params)
+_STATE_TABLE_FIELDS = ("t_w", "t_s", "power_frac",
+                       "t_w2", "t_s2", "power_frac2")
+_LOWERED_FIELDS = ("sleep_state", "deep_state")
 
 PARAM_FIELDS = (
     "t_pdt", "tpdt_init", "max_tpdt", "bound", "sync_overhead",
     "t_w", "t_s", "power_frac",
+    "t_w2", "t_s2", "power_frac2", "t_dst",
+    "max_delay", "max_frames",
     "hist_bin_width", "hist_log_min", "hist_log_max", "hist_clear_n",
     "hist_decay",
 )
@@ -103,10 +156,11 @@ STATIC_FIELDS = ("kind", "hist_mode", "hist_bins", "hist_log_bins",
                  "ring_n", "n_r", "cf_mode", "record_hist")
 
 # every Policy field must be classified as numeric param, static structure,
-# or sleep_state (which lowers to the t_w/t_s/power_frac params) — a field
-# in neither set would be silently shared across batch lanes
-assert (set(PARAM_FIELDS) - {"t_w", "t_s", "power_frac"}) \
-    | set(STATIC_FIELDS) | {"sleep_state"} \
+# or a state-table name (sleep_state/deep_state, which lower to the
+# t_w*/t_s*/power_frac* params) — a field in neither set would be silently
+# shared across batch lanes
+assert (set(PARAM_FIELDS) - set(_STATE_TABLE_FIELDS)) \
+    | set(STATIC_FIELDS) | set(_LOWERED_FIELDS) \
     == {f.name for f in dataclasses.fields(Policy)}, \
     "new Policy field not classified in PARAM_FIELDS/STATIC_FIELDS"
 
@@ -116,14 +170,22 @@ def policy_params(policy: Policy) -> dict:
 
     Passing these back into the simulator/predictor functions reproduces the
     policy exactly; stacking several dicts along a leading axis drives the
-    batched sweep.
+    batched sweep.  The FSM state table lowers here: row 1 (t_w/t_s/
+    power_frac) from ``sleep_state``, row 2 (t_w2/t_s2/power_frac2) from
+    ``deep_state``, and ``t_dst`` pins to +inf for single-state kinds so
+    the deep row is numerically unreachable.
     """
-    st = policy.state
+    st, st2 = policy.state, policy.deep
     out = {f: float(getattr(policy, f)) for f in PARAM_FIELDS
-           if f not in ("t_w", "t_s", "power_frac")}
+           if f not in _STATE_TABLE_FIELDS and f != "t_dst"}
     out["t_w"] = st.t_w
     out["t_s"] = st.t_s
     out["power_frac"] = st.power_frac
+    out["t_w2"] = st2.t_w
+    out["t_s2"] = st2.t_s
+    out["power_frac2"] = st2.power_frac
+    out["t_dst"] = float(policy.t_dst) if policy.dual_capable \
+        else float("inf")
     return out
 
 
@@ -148,7 +210,8 @@ def canonical_proto(policy: Policy) -> Policy:
     and read their numerics lane-wise from a parameter vector.
     """
     return dataclasses.replace(
-        policy, sleep_state="deep_sleep", t_pdt=0.0, bound=0.01,
+        policy, sleep_state="deep_sleep", deep_state="deep_sleep",
+        t_pdt=0.0, bound=0.01, t_dst=1e-3, max_delay=0.0, max_frames=32,
         tpdt_init=10e-3, max_tpdt=10e-3, sync_overhead=5e-9,
         hist_bin_width=10e-6, hist_log_min=1e-7, hist_log_max=10.0,
         hist_clear_n=250,

@@ -82,15 +82,29 @@ def bin_centers(policy, params=None):
 
 
 def init_state(n_links, policy, params=None):
+    """Predictor state for ``n_links`` (+dummy) rows.
+
+    Non-adaptive kinds without ``record_hist`` carry ONLY the ``tpdt``
+    vector — the histogram/hop arrays are dead state for them, and at
+    batched-sweep scale (B lanes x P links x hist_bins f64) they dominate
+    device memory.
+    """
     P, B = n_links, policy.hist_bins
     st = {
-        "counts": jnp.zeros((P, B), jnp.float64),
-        "sums": jnp.zeros((P, B), jnp.float64),
-        "total": jnp.zeros((P,), jnp.int64),
-        "win_start": jnp.zeros((P,), jnp.float64),
-        "hops": jnp.zeros((P, MAXH), jnp.int64),
         "tpdt": jnp.full((P,), _initial_tpdt(policy, params), jnp.float64),
     }
+    if not (policy.adaptive or policy.record_hist):
+        return st
+    st.update(
+        counts=jnp.zeros((P, B), jnp.float64),
+        sums=jnp.zeros((P, B), jnp.float64),
+        total=jnp.zeros((P,), jnp.int64),
+        win_start=jnp.zeros((P,), jnp.float64),
+        hops=jnp.zeros((P, MAXH), jnp.int64),
+    )
+    if policy.kind == "perfbound_dual":
+        p = _params(policy, params)
+        st["t_dst"] = jnp.full((P,), p["t_dst"], jnp.float64)
     if policy.hist_mode == "circular":
         R = policy.ring_n
         st["ring_bin"] = jnp.full((P, R), -1, jnp.int32)
@@ -110,7 +124,7 @@ def _initial_tpdt(policy, params=None):
     p = _params(policy, params)
     if policy.kind == "none":
         return jnp.inf
-    if policy.kind == "fixed":
+    if policy.kind in ("fixed", "dual", "coalesce"):
         return p["t_pdt"]
     return p["tpdt_init"]
 
@@ -237,15 +251,22 @@ def l_factor(hops, bound):
     return jnp.where(tot > 0, l, bound)
 
 
-def tpdt_select(counts, sums, N, total, policy, params=None):
+def _suffix_sum(x):
+    """Suffix (tail) accumulation along the bin axis."""
+    return jnp.cumsum(x[..., ::-1], axis=-1)[..., ::-1]
+
+
+def tpdt_select(counts, sums, N, total, policy, params=None, ccum=None):
     """PerfBound bin selection (vectorized over leading dims).
 
     From the highest bin downwards accumulate counts; pick the leftmost bin
-    whose tail-accumulation is <= N; t_PDT = mean of that bin.
+    whose tail-accumulation is <= N; t_PDT = mean of that bin.  ``ccum``
+    optionally supplies a precomputed suffix count accumulation (shared
+    with ``tdst_select`` in the fused perfbound_dual path).
     """
     p = _params(policy, params)
     centers = bin_centers(policy, p)
-    rcum = jnp.cumsum(counts[..., ::-1], axis=-1)[..., ::-1]
+    rcum = _suffix_sum(counts) if ccum is None else ccum
     feasible = rcum <= N[..., None]
     found = feasible.any(-1)
     j = jnp.argmax(feasible, axis=-1)
@@ -254,6 +275,75 @@ def tpdt_select(counts, sums, N, total, policy, params=None):
     mean = jnp.where(cj > 0, sj / jnp.maximum(cj, 1e-30), centers[j])
     t = jnp.where(found, mean, p["max_tpdt"])
     return jnp.where(total > 0, t, p["tpdt_init"])
+
+
+def deep_breakeven(params) -> jnp.ndarray:
+    """Residual idle time beyond the demotion point that amortizes a deep
+    (row-2) wake: the extra wake transition plus the second down transition
+    at wake power must be repaid by the deeper power floor.
+
+        R* = ((t_w2 - t_w) + t_s2 * (1 - frac)) / (frac - frac2)
+
+    Degenerate ladders (frac2 >= frac, i.e. deep saves nothing) price the
+    break-even at +inf — demotion never pays.
+    """
+    gain = params["power_frac"] - params["power_frac2"]
+    cost = (params["t_w2"] - params["t_w"]) \
+        + params["t_s2"] * (1.0 - params["power_frac"])
+    return jnp.where(gain > 0, cost / jnp.maximum(gain, 1e-30), jnp.inf)
+
+
+def tdst_select(counts, sums, tpdt, r_star, total, policy, params=None,
+                ccum=None):
+    """Demotion-threshold selection from the inactivity histogram.
+
+    For each candidate bin center T the histogram's suffix mass estimates
+    the conditional residual idle E[gap - T | gap >= T]; the leftmost
+    (earliest-demoting) T whose residual covers the break-even ``r_star``
+    wins, and the threshold converts to a timer past the sleep deadline:
+    t_dst = max(T - t_pdt, 0).  No feasible bin -> +inf (never demote);
+    no history yet -> the policy's initial ``t_dst``.
+    """
+    p = _params(policy, params)
+    centers = bin_centers(policy, p)
+    if ccum is None:
+        ccum = _suffix_sum(counts)
+    scum = _suffix_sum(sums)
+    resid = scum / jnp.maximum(ccum, 1e-30) - centers
+    feasible = (ccum > 0) & (resid >= r_star[..., None])
+    found = feasible.any(-1)
+    j = jnp.argmax(feasible, axis=-1)
+    T = centers[j]
+    t = jnp.where(found, jnp.maximum(T - tpdt, 0.0), jnp.inf)
+    return jnp.where(total > 0, t, p["t_dst"])
+
+
+def compute_tdst(st, lp, tpdt_new, policy, params=None):
+    """Recalculate the per-port demotion timer for rows ``lp`` given the
+    freshly selected ``tpdt_new``.  (K,) -> (K,)."""
+    p = _params(policy, params)
+    r_star = jnp.broadcast_to(deep_breakeven(p), lp.shape)
+    return tdst_select(st["counts"][lp], st["sums"][lp], tpdt_new, r_star,
+                       st["total"][lp], policy, p)
+
+
+def compute_tpdt_tdst(st, lp, t_now, t_w, policy, params=None):
+    """Fused perfbound_dual update: ONE set of histogram gathers and one
+    shared suffix-count accumulation feed both the t_PDT selection and the
+    demotion-threshold selection — the per-message hot path would
+    otherwise do both twice.  Returns (t_pdt, t_dst), each (K,)."""
+    p = _params(policy, params)
+    counts = st["counts"][lp]
+    sums = st["sums"][lp]
+    total = st["total"][lp]
+    ccum = _suffix_sum(counts)
+    X = jnp.maximum(t_now - st["win_start"][lp], 0.0)
+    l = l_factor(st["hops"][lp], p["bound"])
+    N = l * X / t_w
+    t = tpdt_select(counts, sums, N, total, policy, p, ccum=ccum)
+    r_star = jnp.broadcast_to(deep_breakeven(p), lp.shape)
+    td = tdst_select(counts, sums, t, r_star, total, policy, p, ccum=ccum)
+    return t, td
 
 
 def pbc_cf(reg, ratio_log, n_seen, policy):

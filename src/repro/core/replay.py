@@ -18,7 +18,11 @@ The serial engine is the B=1 case of the batched one: ``policies`` lanes
 share a canonical static proto (``eee.canonical_proto``) and read their
 numerics lane-wise from a stacked parameter vector, so one compiled
 program serves every policy of a static group — and every B — per segment
-shape.  Between segments only jitted-call dispatch happens on host; the
+shape.  The ``net`` carry is an opaque pytree to this layer: the FSM
+fields the dual-mode kinds add (``deadline2``/``time_sleep2``/``n_deep``,
+plus the coalescing-cycle state of the ``coalesce`` kind — DESIGN.md §6)
+vmap over the B policy axis and the T trace axis like every other entry,
+with no executor changes.  Between segments only jitted-call dispatch happens on host; the
 carry never leaves the device (``tests/test_plan.py`` pins this with a
 ``jax.transfer_guard``).
 """

@@ -1,9 +1,10 @@
 """Coupled network power simulator: a ``lax.scan`` over messages.
 
 Each scan step walks one message along its (<=5-hop) minimal route with a
-cut-through timing model, checks/updates every traversed link's EEE state
-(PDT timers, wake penalties), feeds the PerfBound predictors, and integrates
-per-link wake/sleep time for energy accounting.
+cut-through timing model, checks/updates every traversed link's EEE FSM
+(PDT timers, the Fast Wake -> Deep Sleep demotion ladder, coalescing
+deferrals, wake penalties — DESIGN.md §6), feeds the PerfBound predictors,
+and integrates per-link wake/sleep/deep-sleep time for energy accounting.
 
 TPU-native layout: per-hop state reads are gathered up front (a message's
 route never repeats a link), the 5-hop time chain runs on registers, and all
@@ -51,19 +52,34 @@ def init_net(n_links, policy: Policy, params=None):
     P = n_links + 1  # +1 dummy row absorbing masked writes
     # PDT timers are armed at t=0 (ports start awake, counting down) — the
     # same convention as the decoupled per-port replay, so both paths see
-    # identical first-arrival semantics.
+    # identical first-arrival semantics.  The demotion deadline sits a
+    # (clamped) t_dst past the sleep deadline; for single-state kinds
+    # t_dst = +inf keeps the deep row of the FSM unreachable.
+    p = pb._params(policy, params)
     dl0 = pb._initial_tpdt(policy, params)
-    return {
+    dl2_0 = dl0 + jnp.maximum(p["t_dst"], p["t_s"])
+    net = {
         "dir_free": jnp.zeros((2 * n_links + 1,), jnp.float64),
         "last_end": jnp.zeros((P,), jnp.float64),
         "deadline": jnp.full((P,), dl0, jnp.float64),
+        "deadline2": jnp.full((P,), dl2_0, jnp.float64),
         "time_wake": jnp.zeros((P,), jnp.float64),
         "time_sleep": jnp.zeros((P,), jnp.float64),
+        "time_sleep2": jnp.zeros((P,), jnp.float64),
         "n_wake": jnp.zeros((P,), jnp.int64),
         "n_hit": jnp.zeros((P,), jnp.int64),
         "n_miss": jnp.zeros((P,), jnp.int64),
+        "n_deep": jnp.zeros((P,), jnp.int64),
         "pred": pb.init_state(P, policy, params),
     }
+    if policy.kind == "coalesce":
+        # per-port coalescing-cycle carry: frames absorbed by the current
+        # sleep cycle, the previous cycle's final count (the early-wake
+        # burst-size estimate), and the current cycle's wake-completion time
+        net["coal_n"] = jnp.zeros((P,), jnp.float64)
+        net["coal_prev"] = jnp.zeros((P,), jnp.float64)
+        net["coal_release"] = jnp.zeros((P,), jnp.float64)
+    return net
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +94,13 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     p = pb._params(policy, params)
     t_w = p["t_w"] + p["sync_overhead"]
     t_s = p["t_s"]
+    # FSM row 2 (Deep Sleep): reachable only past ``deadline2``, which
+    # single-state kinds pin to +inf (t_dst = inf) — every row-2 branch
+    # below then selects the row-1 value, reproducing the single-state
+    # arithmetic bit for bit.
+    t_w2 = p["t_w2"] + p["sync_overhead"]
+    t_s2 = p["t_s2"]
+    coal = policy.kind == "coalesce"
 
     active = (jnp.arange(H) < nhops) & valid & (links >= 0)
     lp = jnp.where(active, links, n_links)                 # dummy row when off
@@ -87,29 +110,64 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     free = net["dir_free"][dp]
     last = net["last_end"][lp]
     dl = net["deadline"][lp]
+    dl2 = net["deadline2"][lp]
     tpdt_prev = net["pred"]["tpdt"][lp]
+    if coal:
+        # wake deferral for the frame that would wake a sleeping port:
+        # full max_delay, scaled down when the previous cycle's burst
+        # overran the queue bound (rate estimate of the max_frames
+        # trigger).  At a miss the just-ended cycle's count still sits in
+        # coal_n (it rolls into coal_prev below), so the freshest burst
+        # estimate is coal_n when non-zero, else the rolled coal_prev.
+        coal_n_g = net["coal_n"][lp]
+        coal_prev_g = net["coal_prev"][lp]
+        coal_release_g = net["coal_release"][lp]
+        prev_burst = jnp.where(coal_n_g > 0, coal_n_g, coal_prev_g)
+        defer_amt = jnp.where(
+            p["max_frames"] > 1.0,
+            p["max_delay"] * p["max_frames"]
+            / jnp.maximum(prev_burst, p["max_frames"]), 0.0)
+
+    def _fsm(ta, dl_h, dl2_h, defer_h):
+        """One port's FSM read at raw arrival ``ta``: (asleep, deep,
+        in_down, in_down2, effective arrival, wake penalty)."""
+        asleep = ta >= dl_h
+        tae = ta + jnp.where(asleep, defer_h, 0.0) if coal else ta
+        deep = tae >= dl2_h
+        in_down = asleep & (tae < dl_h + t_s)
+        in_down2 = deep & (tae < dl2_h + t_s2)
+        pen_fast = jnp.where(in_down, dl_h + t_s - tae, 0.0) + t_w
+        pen_deep = jnp.where(in_down2, dl2_h + t_s2 - tae, 0.0) + t_w2
+        pen = jnp.where(asleep, jnp.where(deep, pen_deep, pen_fast), 0.0)
+        return asleep, deep, in_down, in_down2, tae, pen
 
     # ---- unrolled 5-hop time chain (register-only) -----------------------
     t_head = t_inj
     t_avail = jnp.zeros((H,), jnp.float64)
     t_start = jnp.zeros((H,), jnp.float64)
+    if coal:
+        # pre-occupancy arrival per hop: the moment the frame reaches the
+        # port's queue, BEFORE waiting for the link to free — the time the
+        # coalescing-cycle join test must use (a frame queued behind the
+        # waking head is serviced after the release, but it joined before)
+        t_arr = jnp.zeros((H,), jnp.float64)
     delivery = t_inj
     for h in range(H):
         ta = jnp.maximum(t_head, free[h])
-        asleep = ta >= dl[h]
-        in_down = asleep & (ta < dl[h] + t_s)
-        pen = jnp.where(
-            asleep, jnp.where(in_down, dl[h] + t_s - ta, 0.0) + t_w, 0.0)
-        ts_ = ta + pen
+        _, _, _, _, tae, pen = _fsm(ta, dl[h], dl2[h],
+                                    defer_amt[h] if coal else 0.0)
+        ts_ = tae + pen
         te_ = ts_ + t_ser
         t_avail = t_avail.at[h].set(ta)
         t_start = t_start.at[h].set(ts_)
+        if coal:
+            t_arr = t_arr.at[h].set(t_head)
         t_head = jnp.where(active[h], ts_ + pm.switch_latency, t_head)
         delivery = jnp.where(active[h], te_, delivery)
 
     t_end = t_start + t_ser
-    asleep = t_avail >= dl
-    in_down = asleep & (t_avail < dl + t_s)
+    asleep, deep, in_down, in_down2, tae, _ = _fsm(
+        t_avail, dl, dl2, defer_amt if coal else 0.0)
     gap = t_avail - last
     new_last = jnp.maximum(last, t_end)
 
@@ -118,23 +176,47 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     # already integrated.  awake case: the whole span frontier..t_end is at
     # wake power (idle-awake + transmission); overlap with the opposite
     # direction can make t_end < frontier, in which case nothing is added.
-    # asleep case: PDT tail (frontier..deadline) + down transition + wake
-    # transition + transmission at wake power; the remainder sleeps (zero if
-    # the packet lands during the down transition).
+    # asleep case: PDT tail (frontier..deadline) + down transition(s) + wake
+    # transition + transmission at wake power; the span between transitions
+    # sleeps at the row-1 floor and — past the demotion deadline and its
+    # second down transition — at the row-2 floor (zero spans if the packet
+    # lands during a down transition).
+    wake_fast = (dl - last) + t_s + t_w + t_ser
+    wake_deep = (dl - last) + t_s + t_s2 + t_w2 + t_ser
     wake_add = jnp.where(asleep,
-                         (dl - last) + t_s + t_w + t_ser,
+                         jnp.where(deep, wake_deep, wake_fast),
                          jnp.maximum(new_last - last, 0.0))
     sleep_add = jnp.where(asleep & ~in_down,
-                          jnp.maximum(t_avail - (dl + t_s), 0.0), 0.0)
+                          jnp.where(deep, dl2 - (dl + t_s),
+                                    jnp.maximum(tae - (dl + t_s), 0.0)),
+                          0.0)
+    sleep2_add = jnp.where(deep & ~in_down2,
+                           jnp.maximum(tae - (dl2 + t_s2), 0.0), 0.0)
     a = active.astype(jnp.float64)
     net = dict(
         net,
         time_wake=net["time_wake"].at[lp].add(wake_add * a),
         time_sleep=net["time_sleep"].at[lp].add(sleep_add * a),
+        time_sleep2=net["time_sleep2"].at[lp].add(sleep2_add * a),
         n_wake=net["n_wake"].at[lp].add((asleep & active).astype(jnp.int64)),
         n_miss=net["n_miss"].at[lp].add((asleep & active).astype(jnp.int64)),
         n_hit=net["n_hit"].at[lp].add((~asleep & active).astype(jnp.int64)),
+        n_deep=net["n_deep"].at[lp].add((deep & active).astype(jnp.int64)),
     )
+
+    # ---- coalescing-cycle bookkeeping -------------------------------------
+    if coal:
+        miss = asleep & active
+        join = active & ~asleep & (coal_n_g > 0) \
+            & (t_arr <= coal_release_g)
+        roll = jnp.where(coal_n_g > 0, coal_n_g, coal_prev_g)
+        net["coal_prev"] = net["coal_prev"].at[lp].set(
+            jnp.where(miss, roll, coal_prev_g))
+        net["coal_n"] = net["coal_n"].at[lp].set(
+            jnp.where(miss, 1.0,
+                      jnp.where(join, coal_n_g + 1.0, coal_n_g)))
+        net["coal_release"] = net["coal_release"].at[lp].set(
+            jnp.where(miss, t_start, coal_release_g))
 
     # ---- occupancy / transmission-end bookkeeping -------------------------
     net["dir_free"] = net["dir_free"].at[dp].add(
@@ -150,15 +232,29 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
         ratio = gap / jnp.maximum(tpdt_prev, 1e-12)
         pred = pb.record_outcomes(pred, lp, asleep, ratio, active, policy)
     if policy.adaptive:
-        new_tpdt = pb.compute_tpdt(pred, lp, t_end, p["t_w"], policy, p)
+        if policy.kind == "perfbound_dual":
+            new_tpdt, new_tdst = pb.compute_tpdt_tdst(
+                pred, lp, t_end, p["t_w"], policy, p)
+            pred = dict(pred, t_dst=pred["t_dst"].at[lp].set(
+                jnp.where(active, new_tdst, pred["t_dst"][lp])))
+        else:
+            new_tpdt = pb.compute_tpdt(pred, lp, t_end, p["t_w"], policy, p)
         pred = dict(pred, tpdt=pred["tpdt"].at[lp].set(
             jnp.where(active, new_tpdt, pred["tpdt"][lp])))
     net["pred"] = pred
 
-    # deadline = end of PDT countdown after the latest transmission
+    # deadline = end of PDT countdown after the latest transmission;
+    # deadline2 = the demotion point a (clamped) t_dst further out
     tpdt_now = net["pred"]["tpdt"][lp]
     new_dl = jnp.where(active, new_last + tpdt_now, dl)
     net["deadline"] = net["deadline"].at[lp].add(new_dl - dl)
+    tdst_now = net["pred"]["t_dst"][lp] \
+        if policy.kind == "perfbound_dual" else p["t_dst"]
+    new_dl2 = jnp.where(active, new_dl + jnp.maximum(tdst_now, t_s), dl2)
+    # masked SET, not scatter-add: adaptive t_dst legitimately swings
+    # between +inf ("never demote") and finite, and inf - inf through an
+    # add would latch the row at NaN, silently disabling demotion forever
+    net["deadline2"] = net["deadline2"].at[lp].set(new_dl2)
 
     lat = jnp.where(valid & (nhops > 0), delivery - t_inj, 0.0)
     events = (lp, t_start, t_end, active)
@@ -189,15 +285,33 @@ def sim_chunk(net, msgs, policy, pm, n_links, collect_events=False):
 
 
 def close_out(net, t_end_sim, policy: Policy, n_links: int):
-    st = policy.state
-    last = net["last_end"][:n_links]
-    dl = net["deadline"][:n_links]
+    """Integrate every link's tail (last transmission .. end of sim) at the
+    FSM row it ends in: awake, row-1 sleep past ``deadline``, row-2 sleep
+    past ``deadline2`` (never reached by single-state kinds).  Returns
+    (time_wake, time_sleep, time_sleep2)."""
+    st, st2 = policy.state, policy.deep
+    # jnp inputs throughout: the multi-trace readback hands numpy views in,
+    # and raw numpy would warn on the (masked-away) inf-inf deep spans of
+    # never-woken links
+    last = jnp.asarray(net["last_end"][:n_links])
+    dl = jnp.asarray(net["deadline"][:n_links])
+    dl2 = jnp.asarray(net["deadline2"][:n_links])
     t_end_sim = jnp.maximum(t_end_sim, last.max())
     sleeps = dl + st.t_s < t_end_sim
-    wake_extra = jnp.where(sleeps, (dl - last) + st.t_s, t_end_sim - last)
-    sleep_extra = jnp.where(sleeps, t_end_sim - dl - st.t_s, 0.0)
+    deeps = dl2 + st2.t_s < t_end_sim
+    # elapsed part of the second down transition (wake power, like every
+    # transition): full t_s2 once demoted, partial if the sim ends
+    # mid-transition, 0 for single-state rows (dl2 = +inf)
+    down2 = jnp.clip(t_end_sim - dl2, 0.0, st2.t_s)
+    wake_extra = jnp.where(
+        sleeps, (dl - last) + st.t_s + down2, t_end_sim - last)
+    sleep_extra = jnp.where(
+        sleeps, jnp.where(deeps, dl2 - (dl + st.t_s),
+                          jnp.minimum(t_end_sim, dl2) - dl - st.t_s), 0.0)
+    sleep2_extra = jnp.where(deeps, t_end_sim - dl2 - st2.t_s, 0.0)
     return (net["time_wake"][:n_links] + jnp.maximum(wake_extra, 0.0),
-            net["time_sleep"][:n_links] + jnp.maximum(sleep_extra, 0.0))
+            net["time_sleep"][:n_links] + jnp.maximum(sleep_extra, 0.0),
+            net["time_sleep2"][:n_links] + jnp.maximum(sleep2_extra, 0.0))
 
 
 @dataclass
@@ -211,9 +325,11 @@ class SimResult:
     node_energy: float
     total_energy: float
     asleep_frac: float          # mean fraction of time links spent asleep
+    deep_frac: float            # fraction of link time in the deep FSM row
     n_wake_transitions: int
     hits: int
     misses: int
+    deep_misses: int            # arrivals that found their port demoted
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -221,13 +337,15 @@ class SimResult:
 
 def summarize(net, t_end, busy_node_secs, lat_sum, lat_max, n_msgs,
               policy: Policy, pm: PowerModel, topo) -> SimResult:
-    tw, ts_ = close_out(net, t_end, policy, topo.n_links)
+    tw, ts_, ts2 = close_out(net, t_end, policy, topo.n_links)
     frac = policy.state.power_frac
-    link_e = float(2 * pm.port_power * (tw.sum() + frac * ts_.sum()))
+    frac2 = policy.deep.power_frac
+    link_e = float(2 * pm.port_power
+                   * (tw.sum() + frac * ts_.sum() + frac2 * ts2.sum()))
     switch_e = float(pm.switch_power * topo.n_switches * t_end)
     node_e = float(pm.node_power_min * topo.n_nodes * t_end
                    + (pm.node_power_max - pm.node_power_min) * busy_node_secs)
-    total_t = tw.sum() + ts_.sum()
+    total_t = tw.sum() + ts_.sum() + ts2.sum()
     return SimResult(
         makespan=float(t_end),
         mean_latency=float(lat_sum / max(n_msgs, 1)),
@@ -237,10 +355,13 @@ def summarize(net, t_end, busy_node_secs, lat_sum, lat_max, n_msgs,
         switch_energy=switch_e,
         node_energy=node_e,
         total_energy=link_e + switch_e + node_e,
-        asleep_frac=float(ts_.sum() / jnp.maximum(total_t, 1e-30)),
+        asleep_frac=float((ts_.sum() + ts2.sum())
+                          / jnp.maximum(total_t, 1e-30)),
+        deep_frac=float(ts2.sum() / jnp.maximum(total_t, 1e-30)),
         n_wake_transitions=int(net["n_wake"][:topo.n_links].sum()),
         hits=int(net["n_hit"][:topo.n_links].sum()),
         misses=int(net["n_miss"][:topo.n_links].sum()),
+        deep_misses=int(net["n_deep"][:topo.n_links].sum()),
     )
 
 

@@ -24,9 +24,12 @@ a leading batch axis and evaluated side by side:
 
 ``sweep_policies`` is the public entry point; ``compare_policies`` in
 ``repro.core.simulator`` is built on top of it.  Sleep states lower to
-numbers (t_w/t_s/power_frac), so Fast Wake and Deep Sleep variants of the
-same predictor batch together; a typical paper grid (2 kinds x 3 bounds x
-2 states) collapses from 12 serial replays into 2 batched ones.
+numbers (t_w/t_s/power_frac — and the dual-mode FSM's second row plus its
+``t_dst``/coalescing timers, DESIGN.md §6), so Fast Wake / Deep Sleep /
+ladder variants of the same kind batch together: a typical paper grid
+(2 kinds x 3 bounds x 2 states) collapses from 12 serial replays into 2
+batched ones, and a whole demotion-timer or coalescing-window curve is
+ONE batched replay of its kind's static group.
 """
 from __future__ import annotations
 

@@ -7,6 +7,13 @@ as vector selects.  Exact for energy/hit/miss statistics given fixed arrival
 times (no latency feedback); the coupled `lax.scan` simulator quantifies the
 difference.
 
+Dual-mode ladder (DESIGN.md §6): a gap past ``tpdt + t_dst`` demotes the
+port to the deep row (t_w2/t_s2) — the extra down transition integrates at
+wake power, the span between transitions at the row-1 floor and the
+remainder at the row-2 floor.  ``t_dst = inf`` (the single-state lowering)
+keeps every row-2 select on its row-1 value, so classic policies are
+bit-identical to the pre-ladder kernel.
+
 Ports along lanes (TILE_P=128); events along a fori loop over rows of the
 transposed (E, P) input.  VMEM: gaps+durs (E x 128 f32) * 2 = 2 MB at E=2048.
 """
@@ -23,41 +30,69 @@ TILE_P = 128
 MAX_E = 8192
 
 
-def _kernel(gaps_ref, durs_ref, tpdt_ref, tail_ref,
-            wake_ref, sleep_ref, nwake_ref, hits_ref, miss_ref, *,
-            t_w, t_s, n_events):
+def _kernel(gaps_ref, durs_ref, tpdt_ref, tds_ref, tail_ref,
+            wake_ref, sleep_ref, sleep2_ref, nwake_ref, hits_ref, miss_ref,
+            ndeep_ref, *, t_w, t_s, t_w2, t_s2, n_events):
     tpdt = tpdt_ref[...]
+    # per-port demotion timer, pre-clamped to >= t_s by the caller
+    # (demotion cannot precede the first down transition)
+    tds = tds_ref[...]
 
     def body(e, carry):
-        wake, sleep, nw, hit, miss = carry
+        wake, sleep, sleep2, nw, hit, miss, nd = carry
         g = gaps_ref[e, :]
         d = durs_ref[e, :]
         act = d > 0
         asleep = act & (g >= tpdt)
-        wake_add = jnp.where(asleep, tpdt + t_s + t_w + d, g + d)
-        sleep_add = jnp.where(asleep, jnp.maximum(g - tpdt - t_s, 0.0), 0.0)
+        deep = act & (g >= tpdt + tds)
+        wake_fast = tpdt + t_s + t_w + d
+        wake_deep = tpdt + t_s + t_s2 + t_w2 + d
+        wake_add = jnp.where(asleep,
+                             jnp.where(deep, wake_deep, wake_fast), g + d)
+        sleep_add = jnp.where(asleep,
+                              jnp.where(deep, tds - t_s,
+                                        jnp.maximum(g - tpdt - t_s, 0.0)),
+                              0.0)
+        sleep2_add = jnp.where(
+            deep, jnp.maximum(g - tpdt - tds - t_s2, 0.0), 0.0)
         af = asleep.astype(jnp.float32)
         return (wake + jnp.where(act, wake_add, 0.0),
                 sleep + jnp.where(act, sleep_add, 0.0),
-                nw + af, hit + (act & ~asleep).astype(jnp.float32), miss + af)
+                sleep2 + sleep2_add,
+                nw + af, hit + (act & ~asleep).astype(jnp.float32), miss + af,
+                nd + deep.astype(jnp.float32))
 
     z = jnp.zeros((gaps_ref.shape[1],), jnp.float32)
-    wake, sleep, nw, hit, miss = lax.fori_loop(0, n_events, body,
-                                               (z, z, z, z, z))
+    wake, sleep, sleep2, nw, hit, miss, nd = lax.fori_loop(
+        0, n_events, body, (z, z, z, z, z, z, z))
     tail = tail_ref[...]
     tail_sleeps = tail >= tpdt + t_s
-    wake_ref[...] = wake + jnp.where(tail_sleeps, tpdt + t_s, tail)
-    sleep_ref[...] = sleep + jnp.where(tail_sleeps, tail - tpdt - t_s, 0.0)
+    tail_deep = tail >= tpdt + tds + t_s2
+    wake_ref[...] = wake + jnp.where(
+        tail_sleeps, tpdt + t_s + jnp.where(tail_deep, t_s2, 0.0), tail)
+    sleep_ref[...] = sleep + jnp.where(
+        tail_sleeps, jnp.where(tail_deep, tds - t_s, tail - tpdt - t_s), 0.0)
+    sleep2_ref[...] = sleep2 + jnp.where(
+        tail_deep, tail - tpdt - tds - t_s2, 0.0)
     nwake_ref[...] = nw
     hits_ref[...] = hit
     miss_ref[...] = miss
+    ndeep_ref[...] = nd
 
 
-def port_energy_pallas(gaps, durs, tpdt, tail, *, t_w, t_s, interpret=False):
-    """gaps/durs: (E, P) f32; tpdt/tail: (P,) f32.  Returns dict of (P,)."""
+def port_energy_pallas(gaps, durs, tpdt, tail, *, t_w, t_s,
+                       t_w2=0.0, t_s2=0.0, t_dst=None,
+                       interpret=False):
+    """gaps/durs: (E, P) f32; tpdt/tail: (P,) f32; t_dst: scalar or (P,)
+    demotion timer (traced — a timer sweep reuses ONE compiled kernel;
+    None/inf = single-state).  Returns dict of (P,)."""
     E, P = gaps.shape
     assert E <= MAX_E, f"E={E} exceeds kernel cap; chunk at ops level"
     Pp = pl.cdiv(P, TILE_P) * TILE_P
+    if t_dst is None:
+        t_dst = jnp.inf
+    tds = jnp.broadcast_to(
+        jnp.maximum(jnp.asarray(t_dst, jnp.float32), jnp.float32(t_s)), (P,))
 
     def padE(x):
         return jnp.zeros((E, Pp), jnp.float32).at[:, :P].set(
@@ -69,15 +104,18 @@ def port_energy_pallas(gaps, durs, tpdt, tail, *, t_w, t_s, interpret=False):
 
     outs = pl.pallas_call(
         functools.partial(_kernel, t_w=float(t_w), t_s=float(t_s),
-                          n_events=E),
+                          t_w2=float(t_w2), t_s2=float(t_s2), n_events=E),
         grid=(Pp // TILE_P,),
         in_specs=[pl.BlockSpec((E, TILE_P), lambda i: (0, i)),
                   pl.BlockSpec((E, TILE_P), lambda i: (0, i)),
                   pl.BlockSpec((TILE_P,), lambda i: (i,)),
+                  pl.BlockSpec((TILE_P,), lambda i: (i,)),
                   pl.BlockSpec((TILE_P,), lambda i: (i,))],
-        out_specs=[pl.BlockSpec((TILE_P,), lambda i: (i,))] * 5,
-        out_shape=[jax.ShapeDtypeStruct((Pp,), jnp.float32)] * 5,
+        out_specs=[pl.BlockSpec((TILE_P,), lambda i: (i,))] * 7,
+        out_shape=[jax.ShapeDtypeStruct((Pp,), jnp.float32)] * 7,
         interpret=interpret,
-    )(padE(gaps), padE(durs), padP(tpdt, fill=1e30), padP(tail))
-    keys = ["time_wake", "time_sleep", "n_wake", "hits", "misses"]
+    )(padE(gaps), padE(durs), padP(tpdt, fill=1e30),
+      padP(tds, fill=float("inf")), padP(tail))
+    keys = ["time_wake", "time_sleep", "time_sleep2", "n_wake", "hits",
+            "misses", "n_deep"]
     return {k: v[:P] for k, v in zip(keys, outs)}

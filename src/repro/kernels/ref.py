@@ -44,37 +44,58 @@ def hist_update_ref(gaps, *, n_bins, bin_width, log_bins=False,
     return counts, sums.astype(jnp.float32)
 
 
-def port_energy_ref(gaps, durs, tpdt, tail, *, t_w, t_s):
-    """Decoupled per-port EEE/PDT replay (fixed per-port t_PDT).
+def port_energy_ref(gaps, durs, tpdt, tail, *, t_w, t_s,
+                    t_w2=0.0, t_s2=0.0, t_dst=None):
+    """Decoupled per-port EEE/PDT replay (fixed per-port t_PDT) with the
+    dual-mode sleep ladder: gaps past ``tpdt + max(t_dst, t_s)`` demote to
+    the deep row (t_w2/t_s2); ``t_dst`` is a traced scalar or (P,) timer —
+    None/inf is the single-state lowering.
 
     gaps/durs: (E,P) f32 — idle gap before each busy interval and its
     duration (duration 0 = padding).  tpdt/tail: (P,).
-    Returns dict of (P,) arrays: time_wake, time_sleep, n_wake, hits, misses.
+    Returns dict of (P,) arrays: time_wake, time_sleep, time_sleep2,
+    n_wake, hits, misses, n_deep.
     """
     E, P = gaps.shape
+    if t_dst is None:
+        t_dst = jnp.inf
+    tds = jnp.maximum(jnp.asarray(t_dst, jnp.float32), jnp.float32(t_s))
 
     def step(carry, ed):
-        wake, sleep, nw, hit, miss = carry
+        wake, sleep, sleep2, nw, hit, miss, nd = carry
         g, d = ed
         act = d > 0
         asleep = act & (g >= tpdt)
-        wake_add = jnp.where(asleep, tpdt + t_s + t_w + d, g + d)
-        sleep_add = jnp.where(asleep, jnp.maximum(g - tpdt - t_s, 0.0), 0.0)
+        deep = act & (g >= tpdt + tds)
+        wake_add = jnp.where(
+            asleep, jnp.where(deep, tpdt + t_s + t_s2 + t_w2 + d,
+                              tpdt + t_s + t_w + d), g + d)
+        sleep_add = jnp.where(
+            asleep, jnp.where(deep, tds - t_s,
+                              jnp.maximum(g - tpdt - t_s, 0.0)), 0.0)
+        sleep2_add = jnp.where(
+            deep, jnp.maximum(g - tpdt - tds - t_s2, 0.0), 0.0)
         return (wake + jnp.where(act, wake_add, 0.0),
                 sleep + jnp.where(act, sleep_add, 0.0),
+                sleep2 + sleep2_add,
                 nw + asleep.astype(jnp.float32),
                 hit + (act & ~asleep).astype(jnp.float32),
-                miss + asleep.astype(jnp.float32)), None
+                miss + asleep.astype(jnp.float32),
+                nd + deep.astype(jnp.float32)), None
 
     z = jnp.zeros((P,), jnp.float32)
-    (wake, sleep, nw, hit, miss), _ = jax.lax.scan(
-        step, (z, z, z, z, z), (gaps, durs))
+    (wake, sleep, sleep2, nw, hit, miss, nd), _ = jax.lax.scan(
+        step, (z, z, z, z, z, z, z), (gaps, durs))
     # close-out tail
     tail_sleeps = tail >= tpdt + t_s
-    wake = wake + jnp.where(tail_sleeps, tpdt + t_s, tail)
-    sleep = sleep + jnp.where(tail_sleeps, tail - tpdt - t_s, 0.0)
-    return {"time_wake": wake, "time_sleep": sleep, "n_wake": nw,
-            "hits": hit, "misses": miss}
+    tail_deep = tail >= tpdt + tds + t_s2
+    wake = wake + jnp.where(
+        tail_sleeps, tpdt + t_s + jnp.where(tail_deep, t_s2, 0.0), tail)
+    sleep = sleep + jnp.where(
+        tail_sleeps, jnp.where(tail_deep, tds - t_s, tail - tpdt - t_s), 0.0)
+    sleep2 = sleep2 + jnp.where(tail_deep, tail - tpdt - tds - t_s2, 0.0)
+    return {"time_wake": wake, "time_sleep": sleep, "time_sleep2": sleep2,
+            "n_wake": nw, "hits": hit, "misses": miss, "n_deep": nd}
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None):

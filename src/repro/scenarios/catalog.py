@@ -1,6 +1,6 @@
 """The built-in scenario catalog.
 
-Eleven named scenarios spanning four families (see README for the table):
+Twelve named scenarios spanning four families (see README for the table):
 
 * ``ml-*``  — training phases synthesized from ``repro.configs`` model
   definitions through the DP/PP/TP collective schedule (``scenarios.ml``);
@@ -34,6 +34,13 @@ CATALOG = [
                          grad_buckets=6),
         description="gemma3-4b training steps, larger grads/activations "
                     "and finer gradient bucketing than ml-qwen2-1.5b"),
+    Scenario(
+        "ml-qwen3-moe", "ml", "moe_training", 16, seed=13,
+        params=params_of(arch="qwen3-moe-30b-a3b", iters=2),
+        description="qwen3-moe-30b-a3b expert-parallel training steps: "
+                    "top-8 token-routing dispatch/combine all-to-alls per "
+                    "fused layer block — dense symmetric bursts between "
+                    "compute gaps (the dual-mode sleep-ladder stressor)"),
     # -- HPC iteration structures -----------------------------------------
     Scenario(
         "hpc-stencil3d", "hpc", "stencil_halo", 16, seed=21,

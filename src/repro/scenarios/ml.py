@@ -140,3 +140,68 @@ def ml_training(topo, n_nodes, seed, arch, iters=2, dp=0, tp=0, pp=0,
             stage_compute(s, stage_param_b[s] / (tp * opt_bw))
     t.rounds(C.allreduce(nodes, 64), barrier_last=True)   # loss scalar
     return t
+
+
+@builder("moe_training")
+def moe_training(topo, n_nodes, seed, arch, iters=2, layer_groups=4,
+                 tokens_per_iter=8192, act_bytes=2, grad_bytes=2,
+                 hw_flops=100e12, opt_bw=200e9, capacity_factor=1.25,
+                 mapping="linear"):
+    """Expert-parallel MoE training steps: token-routing all-to-alls.
+
+    One trace = ``iters`` training steps of a MoE ``arch`` (e.g.
+    ``qwen3-moe-30b-a3b``) sharded expert-parallel over the whole
+    allocation.  Each of ``layer_groups`` fused layer blocks runs
+    attention/router compute, a **dispatch all-to-all** (top-k routed token
+    activations), expert FFN compute, and a **combine all-to-all** — then
+    the backward mirror (gradients retrace the routes at 2x compute) and an
+    expert-gradient all-reduce per step.  The all-to-all phases produce the
+    dense symmetric bursts separated by compute gaps that distinguish MoE
+    traffic from the dense-model pipeline of ``ml_training``.
+    """
+    cfg = get_config(arch)
+    assert cfg.num_experts > 0, f"{arch} is not a MoE config"
+    nodes = allocate(topo, n_nodes, mapping, seed)
+    t = Trace(nodes=nodes, name=f"moe-{arch}")
+    r = rng(seed)
+
+    L = cfg.num_layers
+    groups = min(layer_groups, L)
+    layers_per = -(-L // groups)
+    # routed token volume per device per layer: every token ships to its
+    # top-k experts (capacity-padded), spread over the EP group
+    topk = max(cfg.experts_per_token, 1)
+    tok_dev = max(tokens_per_iter // n_nodes, 1)
+    route_bytes = int(tok_dev * topk * capacity_factor * cfg.d_model
+                      * act_bytes)
+    # per-device expert shard: every layer's full expert grid split over
+    # the allocation (the gradient sync/optimizer phases scale with the
+    # whole stack, like ml_training's per-stage stage_param_b)
+    expert_param_b = cfg.layer_param_count() * L * grad_bytes
+    shard_param_b = max(expert_param_b // n_nodes, 64)
+    attn_secs = 2 * (cfg.d_model * cfg.d_model * 4) * tok_dev / hw_flops
+    ffn_secs = (2 * 3 * cfg.d_model * cfg.d_ff * topk
+                * capacity_factor * tok_dev) / hw_flops
+
+    def a2a(nbytes):
+        t.rounds(C.alltoall(nodes, max(int(nbytes), 64)))
+
+    # weight-shard broadcast + jittered init
+    t.rounds(C.broadcast(nodes, shard_param_b))
+    t.compute(r.uniform(5e-3, 15e-3, n_nodes))
+
+    for _ in range(iters):
+        for _g in range(groups):                 # forward blocks
+            t.compute(r.uniform(0.9, 1.1, n_nodes) * attn_secs * layers_per)
+            a2a(route_bytes * layers_per)        # dispatch
+            t.compute(r.uniform(0.9, 1.1, n_nodes) * ffn_secs * layers_per)
+            a2a(route_bytes * layers_per)        # combine
+        for _g in range(groups):                 # backward blocks (2x)
+            t.compute(2 * r.uniform(0.9, 1.1, n_nodes) * ffn_secs
+                      * layers_per)
+            a2a(2 * route_bytes * layers_per)    # grad dispatch + combine
+        # expert/attention gradient sync + optimizer
+        t.rounds(C.allreduce(nodes, shard_param_b))
+        t.compute(np.full(n_nodes, shard_param_b / opt_bw))
+    t.rounds(C.allreduce(nodes, 64), barrier_last=True)   # loss scalar
+    return t

@@ -25,8 +25,9 @@ _BASELINE_POLICY = Policy(kind="none")
 
 
 def default_policy_grid() -> Dict[str, Policy]:
-    """A compact representative grid: both sleep states on fixed PDT plus
-    both adaptive predictors — 4 policies in 2 static groups."""
+    """A compact representative grid: both sleep states on fixed PDT, both
+    single-state adaptive predictors, and the three dual-mode FSM kinds
+    (DESIGN.md §6) — 7 policies in 6 static groups."""
     return {
         "fixed-fw-10us": Policy(kind="fixed", t_pdt=1e-5,
                                 sleep_state="fast_wake"),
@@ -36,6 +37,16 @@ def default_policy_grid() -> Dict[str, Policy]:
                                  sleep_state="deep_sleep"),
         "pbc-1pct": Policy(kind="perfbound_correct", bound=0.01,
                            sleep_state="deep_sleep"),
+        "dual-10us-200us": Policy(kind="dual", t_pdt=1e-5, t_dst=2e-4,
+                                  sleep_state="fast_wake",
+                                  deep_state="deep_sleep"),
+        "coalesce-50us": Policy(kind="coalesce", t_pdt=1e-5, t_dst=2e-4,
+                                max_delay=5e-5, max_frames=16,
+                                sleep_state="fast_wake",
+                                deep_state="deep_sleep"),
+        "pbd-1pct": Policy(kind="perfbound_dual", bound=0.01,
+                           sleep_state="fast_wake",
+                           deep_state="deep_sleep"),
     }
 
 
@@ -84,7 +95,8 @@ def run_suite(topo, scenarios=None, policies: Optional[Dict] = None,
 
 CSV_FIELDS = ("makespan", "exec_overhead_pct", "mean_latency",
               "latency_overhead_pct", "link_energy", "total_energy",
-              "energy_saved_pct", "link_energy_saved_pct", "asleep_frac")
+              "energy_saved_pct", "link_energy_saved_pct", "asleep_frac",
+              "deep_frac")
 
 
 def table_rows(results: Dict[str, Dict[str, dict]]):
@@ -102,7 +114,7 @@ def format_table(results: Dict[str, Dict[str, dict]]) -> str:
         lines.append(f"== {sc}")
         lines.append(f"  {'policy':<16} {'makespan':>11} {'overhead%':>10} "
                      f"{'energy_J':>12} {'saved%':>8} {'link_saved%':>12} "
-                     f"{'asleep%':>8}")
+                     f"{'asleep%':>8} {'deep%':>7}")
         for pol, r in rows.items():
             lines.append(
                 f"  {pol:<16} {r['makespan']:>11.5g} "
@@ -110,5 +122,6 @@ def format_table(results: Dict[str, Dict[str, dict]]) -> str:
                 f"{r['total_energy']:>12.5g} "
                 f"{r['energy_saved_pct']:>8.2f} "
                 f"{r['link_energy_saved_pct']:>12.2f} "
-                f"{100 * r['asleep_frac']:>8.2f}")
+                f"{100 * r['asleep_frac']:>8.2f} "
+                f"{100 * r['deep_frac']:>7.2f}")
     return "\n".join(lines)

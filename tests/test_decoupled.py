@@ -132,3 +132,31 @@ def test_ref_and_kernel_paths_agree_end_to_end(topo, pm):
                                rtol=1e-5)
     np.testing.assert_allclose(np.asarray(a["n_wake"]),
                                np.asarray(b["n_wake"]))
+
+
+def test_decoupled_dual_mode_ladder(topo, pm):
+    """The dual-mode per-port evaluation: kernel == ref, the ladder's
+    energy sits between fast-wake-only and deep-sleep-only on the same
+    streams, and long gaps land in the deep account."""
+    tr = small_apps(topo, n_nodes=8)["lammps"]
+    res0, events = _events(topo, pm, tr)
+    gaps, durs, tail = D.events_to_streams(events, topo.n_links,
+                                           res0.makespan)
+    t_pdt = 1e-5
+    fw = Policy(kind="fixed", t_pdt=t_pdt, sleep_state="fast_wake")
+    ds = Policy(kind="fixed", t_pdt=t_pdt, sleep_state="deep_sleep")
+    dual = Policy(kind="dual", t_pdt=t_pdt, t_dst=1e-4,
+                  sleep_state="fast_wake", deep_state="deep_sleep")
+    out = {}
+    for name, pol in (("fw", fw), ("ds", ds), ("dual", dual)):
+        a = D.evaluate_fixed(gaps, durs, tail, t_pdt, pol, pm, use_ref=False)
+        b = D.evaluate_fixed(gaps, durs, tail, t_pdt, pol, pm, use_ref=True)
+        for k in ("link_energy", "wake_time", "sleep_time", "sleep2_time"):
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-5, atol=1e-8,
+                                       err_msg=f"{name}.{k}")
+        out[name] = a
+    assert float(np.asarray(out["dual"]["n_deep"]).sum()) > 0
+    assert out["dual"]["sleep2_time"] > 0
+    assert out["fw"]["sleep2_time"] == out["ds"]["sleep2_time"] == 0.0
+    assert out["ds"]["link_energy"] <= out["dual"]["link_energy"] \
+        <= out["fw"]["link_energy"]

@@ -210,6 +210,95 @@ def test_policy_validation():
 
 
 # ---------------------------------------------------------------------------
+# Demotion-threshold selection (perfbound_dual, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def _pbd(**kw):
+    kw.setdefault("hist_bins", 10)
+    kw.setdefault("hist_bin_width", 1e-3)
+    return Policy(kind="perfbound_dual", sleep_state="fast_wake",
+                  deep_state="deep_sleep", **kw)
+
+
+def test_deep_breakeven_prices_the_ladder():
+    """R* = (extra wake + second down at wake power) / power gain — and a
+    ladder that saves nothing prices demotion at +inf."""
+    p = pb._params(_pbd(), None)
+    want = ((p["t_w2"] - p["t_w"]) + p["t_s2"] * (1 - p["power_frac"])) \
+        / (p["power_frac"] - p["power_frac2"])
+    np.testing.assert_allclose(float(pb.deep_breakeven(p)), want, rtol=1e-12)
+    flat = dict(p, power_frac2=p["power_frac"])
+    assert float(pb.deep_breakeven(flat)) == float("inf")
+
+
+def test_tdst_select_demotes_past_the_short_mode():
+    """Bimodal gaps: a dominant short mode (bin 1) and a thin long tail
+    (bin 9).  With the short mode in the suffix the conditional residual is
+    diluted below R*, so the leftmost feasible threshold sits just PAST the
+    short mode — deep sleep engages only for the long-tail gaps.  A
+    heavy-tail-dominated histogram instead demotes at sleep onset, an
+    unreachable residual never demotes, and no history falls back to the
+    initial timer."""
+    pol = _pbd()
+    centers = np.asarray(pb.bin_centers(pol))
+    tpdt = jnp.asarray(0.5e-3)
+    counts = jnp.zeros((10,)).at[1].set(50.0).at[9].set(2.0)
+    sums = counts * jnp.asarray(centers)
+    # residual at bins 0/1 = 0.094/52 - T < 2e-3 (diluted); from bin 2 the
+    # suffix is the pure 9.5 ms tail -> residual 7 ms: feasible
+    t = pb.tdst_select(counts, sums, tpdt, jnp.asarray(2e-3),
+                       jnp.asarray(52.0), pol)
+    np.testing.assert_allclose(float(t), centers[2] - 0.5e-3, rtol=1e-12)
+    # tail-dominated histogram: bin 0 already feasible -> demote at onset
+    heavy = jnp.zeros((10,)).at[1].set(50.0).at[9].set(20.0)
+    t0bin = pb.tdst_select(heavy, heavy * jnp.asarray(centers), tpdt,
+                           jnp.asarray(1e-3), jnp.asarray(70.0), pol)
+    np.testing.assert_allclose(float(t0bin), 0.0, atol=1e-15)
+    # an unreachable residual (beyond the whole histogram) -> never demote
+    t_inf = pb.tdst_select(counts, sums, tpdt, jnp.asarray(1.0),
+                           jnp.asarray(52.0), pol)
+    assert float(t_inf) == float("inf")
+    # no history yet -> the policy's initial timer
+    t0 = pb.tdst_select(counts, sums, tpdt, jnp.asarray(2e-3),
+                        jnp.asarray(0.0), pol)
+    np.testing.assert_allclose(float(t0), pol.t_dst, rtol=1e-12)
+
+
+def test_fused_tpdt_tdst_matches_separate_calls():
+    """The hot-path fusion (one gather + shared suffix cumsum) is exactly
+    the two separate selections."""
+    pol = _pbd()
+    st_ = pb.init_state(3, pol)
+    rng_ = np.random.default_rng(4)
+    for _ in range(15):
+        lp = jnp.asarray(rng_.integers(0, 3, 2))
+        g = jnp.asarray(rng_.uniform(1e-4, 8e-3, 2))
+        t = jnp.asarray(rng_.uniform(0, 1, 2))
+        st_ = pb.record_gaps(st_, lp, g, t, jnp.array([True, True]), pol)
+        st_ = pb.record_hops(st_, lp, jnp.array([2, 3]),
+                             jnp.array([True, True]), pol)
+    lp = jnp.arange(3)
+    t_fused, td_fused = pb.compute_tpdt_tdst(st_, lp, 1.0, 375e-9, pol)
+    t_sep = pb.compute_tpdt(st_, lp, 1.0, 375e-9, pol)
+    td_sep = pb.compute_tdst(st_, lp, t_sep, pol)
+    np.testing.assert_array_equal(np.asarray(t_fused), np.asarray(t_sep))
+    np.testing.assert_array_equal(np.asarray(td_fused), np.asarray(td_sep))
+
+
+def test_compute_tdst_threshold_never_negative():
+    """A t_PDT beyond the selected bin clamps the timer at 0 (demote at
+    sleep onset), never negative."""
+    pol = _pbd()
+    st_ = pb.init_state(1, pol)
+    for g, t in [(2.5e-3, 1.0), (2.6e-3, 2.0), (9.5e-3, 3.0)]:
+        st_ = pb.record_gaps(st_, jnp.array([0]), jnp.array([g]),
+                             jnp.array([t]), jnp.array([True]), pol)
+    t = pb.compute_tdst(st_, jnp.array([0]), jnp.asarray([5e-3]), pol)
+    assert float(t[0]) >= 0.0
+
+
+# ---------------------------------------------------------------------------
 # Recency-biased histogram (beyond-paper; the paper's §5 future work)
 # ---------------------------------------------------------------------------
 

@@ -1,7 +1,8 @@
 """Plan/execute pipeline: property-style equivalence with the step-loop
-reference engine (all four policy kinds x FatTree + Megafly, including
-collect_events), plan lowering/segmentation, plan + route caches, and
-device-residency of the hot loop (no transfers, no warm compiles)."""
+reference engine (all seven policy kinds — incl. the dual-mode FSM ladder
+and coalescing — x FatTree + Megafly, including collect_events), plan
+lowering/segmentation, plan + route caches, and device-residency of the
+hot loop (no transfers, no warm compiles)."""
 import jax
 import numpy as np
 import pytest
@@ -28,11 +29,20 @@ POLICIES = {
                         sleep_state="fast_wake"),
     "perfbound_correct": Policy(kind="perfbound_correct", bound=0.01,
                                 hist_mode="circular", ring_n=32),
+    "dual": Policy(kind="dual", t_pdt=2e-5, t_dst=2e-4,
+                   sleep_state="fast_wake", deep_state="deep_sleep"),
+    "coalesce": Policy(kind="coalesce", t_pdt=2e-5, t_dst=2e-4,
+                       max_delay=5e-5, max_frames=4,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
+    "perfbound_dual": Policy(kind="perfbound_dual", bound=0.02,
+                             sleep_state="fast_wake",
+                             deep_state="deep_sleep"),
 }
 
 CHECK_FIELDS = ("makespan", "mean_latency", "max_latency", "n_messages",
                 "link_energy", "switch_energy", "node_energy", "total_energy",
-                "asleep_frac", "n_wake_transitions", "hits", "misses")
+                "asleep_frac", "deep_frac", "n_wake_transitions", "hits", "misses",
+                "deep_misses")
 
 
 def _assert_results_match(got, want, label=""):
@@ -120,6 +130,13 @@ def test_batched_sweep_matches_step_loop(data):
         "pb1": Policy(kind="perfbound", bound=0.01),
         "pb5": Policy(kind="perfbound", bound=0.05),
         "pbc": Policy(kind="perfbound_correct", bound=0.02),
+        "dual": Policy(kind="dual", t_pdt=1e-5, t_dst=1e-4,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
+        "coal": Policy(kind="coalesce", t_pdt=1e-5, t_dst=1e-4,
+                       max_delay=2e-5, max_frames=4,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
+        "pbd": Policy(kind="perfbound_dual", bound=0.02,
+                      sleep_state="fast_wake", deep_state="deep_sleep"),
     }
     out = sweep_policies(tr, topo, grid, PM)
     for name, pol in grid.items():

@@ -1,0 +1,205 @@
+"""The Policy static/param factoring contract (DESIGN.md §6), LinkState
+validation, predictor-state gating, and the new-kind compile-count pin."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import perfbound as pb
+from repro.core.eee import (PARAM_FIELDS, STATIC_FIELDS, _LOWERED_FIELDS,
+                            _STATE_TABLE_FIELDS, EEE_STATES, LinkState,
+                            Policy, canonical_proto, policy_params,
+                            static_key)
+from repro.core.instrument import count_compiles
+from repro.core.sweep import group_policies, sweep_policies
+from repro.traffic.trace import Trace
+
+ALL_KINDS = ("none", "fixed", "perfbound", "perfbound_correct",
+             "dual", "coalesce", "perfbound_dual")
+SINGLE_KINDS = ("none", "fixed", "perfbound", "perfbound_correct")
+DUAL_KINDS = ("dual", "coalesce", "perfbound_dual")
+
+
+def _policy(kind):
+    kw = {}
+    if kind in DUAL_KINDS:
+        kw = dict(sleep_state="fast_wake", deep_state="deep_sleep",
+                  t_dst=2e-4)
+    if kind == "coalesce":
+        kw.update(max_delay=5e-5, max_frames=8)
+    return Policy(kind=kind, t_pdt=1e-5, **kw)
+
+
+# ---------------------------------------------------------------------------
+# LinkState validation (a true off state is representable)
+# ---------------------------------------------------------------------------
+
+
+def test_linkstate_allows_power_off():
+    off = LinkState("off", t_w=1e-3, t_s=1e-4, power_frac=0.0)
+    assert off.power_frac == 0.0
+
+
+@pytest.mark.parametrize("kw", [
+    dict(t_w=0.0, t_s=1e-6, power_frac=0.1),     # instant wake
+    dict(t_w=1e-6, t_s=0.0, power_frac=0.1),     # instant down
+    dict(t_w=1e-6, t_s=1e-6, power_frac=-0.1),   # negative power
+    dict(t_w=1e-6, t_s=1e-6, power_frac=1.0),    # no saving at all
+])
+def test_linkstate_rejects_invalid(kw):
+    with pytest.raises(AssertionError):
+        LinkState("bad", **kw)
+
+
+def test_dual_policy_validation():
+    # inverted ladder: deep row must not wake faster / burn more
+    with pytest.raises(AssertionError):
+        Policy(kind="dual", sleep_state="deep_sleep",
+               deep_state="fast_wake")
+    with pytest.raises(AssertionError):
+        Policy(kind="dual", t_dst=-1.0)
+    with pytest.raises(AssertionError):
+        Policy(kind="coalesce", max_delay=-1e-6)
+    with pytest.raises(AssertionError):
+        Policy(kind="coalesce", max_frames=0)
+
+
+# ---------------------------------------------------------------------------
+# Field classification: every Policy field is param, static, or state-table
+# ---------------------------------------------------------------------------
+
+
+def test_every_field_is_classified():
+    classified = (set(PARAM_FIELDS) - set(_STATE_TABLE_FIELDS)) \
+        | set(STATIC_FIELDS) | set(_LOWERED_FIELDS)
+    assert classified == {f.name for f in dataclasses.fields(Policy)}
+
+
+def test_unclassified_field_would_fail():
+    """The import-time completeness assert: a hypothetical new Policy field
+    that lands in neither set breaks the classification identity (so the
+    module fails to import until the field is classified)."""
+    classified = (set(PARAM_FIELDS) - set(_STATE_TABLE_FIELDS)) \
+        | set(STATIC_FIELDS) | set(_LOWERED_FIELDS)
+    with_new = {f.name for f in dataclasses.fields(Policy)} | {"new_knob"}
+    assert classified != with_new
+
+
+def test_no_field_is_doubly_classified():
+    own_params = set(PARAM_FIELDS) - set(_STATE_TABLE_FIELDS)
+    assert not own_params & set(STATIC_FIELDS)
+    assert not own_params & set(_LOWERED_FIELDS)
+    assert not set(STATIC_FIELDS) & set(_LOWERED_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+# policy_params / canonical_proto round-trip, pinned for all seven kinds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_policy_params_roundtrip(kind):
+    pol = _policy(kind)
+    p = policy_params(pol)
+    assert set(p) == set(PARAM_FIELDS)
+    assert all(isinstance(v, float) for v in p.values())
+    # the state table lowers from the named states
+    assert p["t_w"] == pol.state.t_w and p["t_s"] == pol.state.t_s
+    assert p["power_frac"] == pol.state.power_frac
+    assert p["t_w2"] == pol.deep.t_w and p["t_s2"] == pol.deep.t_s
+    assert p["power_frac2"] == pol.deep.power_frac
+    # the deep row is numerically unreachable exactly for single kinds
+    if kind in SINGLE_KINDS:
+        assert p["t_dst"] == float("inf")
+    else:
+        assert p["t_dst"] == pol.t_dst < float("inf")
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_canonical_proto_is_canonical(kind):
+    pol = _policy(kind)
+    proto = canonical_proto(pol)
+    # same static structure, idempotent, and numerics-independent: any
+    # numeric variant of the policy collapses onto the SAME proto (the
+    # compile-cache key of the batched executor)
+    assert static_key(proto) == static_key(pol)
+    assert canonical_proto(proto) == proto
+    variant = dataclasses.replace(pol, t_pdt=0.123, t_dst=0.456,
+                                  bound=0.2, max_delay=1e-3)
+    assert canonical_proto(variant) == proto
+    assert proto.sleep_state == "deep_sleep"
+    assert proto.deep_state == "deep_sleep"
+
+
+def test_static_key_separates_kinds_not_numerics():
+    keys = {static_key(_policy(k)) for k in ALL_KINDS}
+    assert len(keys) == len(ALL_KINDS)
+    a = _policy("dual")
+    b = dataclasses.replace(a, t_dst=1.0, t_pdt=2.0, sleep_state="deep_sleep")
+    assert static_key(a) == static_key(b)
+
+
+# ---------------------------------------------------------------------------
+# Predictor-state gating: dead histogram state is not allocated
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", SINGLE_KINDS[:2])
+def test_init_state_gates_dead_predictor_state(kind):
+    st = pb.init_state(8, Policy(kind=kind, t_pdt=1e-5))
+    assert set(st) == {"tpdt"}
+    assert st["tpdt"].shape == (8,)
+
+
+def test_init_state_keeps_hist_when_recording():
+    st = pb.init_state(8, Policy(kind="fixed", t_pdt=1e-5, record_hist=True,
+                                 hist_bins=32))
+    assert st["counts"].shape == (8, 32)
+    assert st["sums"].shape == (8, 32)
+
+
+@pytest.mark.parametrize("kind", ("perfbound", "perfbound_correct",
+                                  "perfbound_dual"))
+def test_init_state_adaptive_keeps_hist(kind):
+    pol = dataclasses.replace(_policy(kind), hist_bins=16)
+    st = pb.init_state(4, pol)
+    assert st["counts"].shape == (4, 16)
+    assert ("t_dst" in st) == (kind == "perfbound_dual")
+
+
+# ---------------------------------------------------------------------------
+# New kinds batch through the sweep: compile count pinned to static groups
+# ---------------------------------------------------------------------------
+
+
+def _tiny_trace(topo, n=6):
+    nodes = np.arange(n, dtype=np.int64)
+    tr = Trace(nodes=nodes, name="contract")
+    for r in range(3):
+        tr.compute(1e-4)
+        tr.messages([[int(i), int((i + 1 + r) % n), 2048] for i in range(n)],
+                    barrier=(r == 2))
+    return tr
+
+
+def test_new_kinds_batch_and_warm_sweep_compiles_nothing(topo, pm):
+    """dual/coalesce/perfbound_dual group per kind (3 groups for 6
+    policies) and numeric variants reuse the warmed programs: a second
+    sweep with different timers compiles ZERO new programs."""
+    tr = _tiny_trace(topo)
+
+    def grid(scale):
+        return {
+            f"{k}{i}": dataclasses.replace(_policy(k), t_pdt=t * scale,
+                                           t_dst=2 * t * scale)
+            for k in DUAL_KINDS for i, t in ((0, 1e-5), (1, 1e-4))
+        }
+
+    g1 = grid(1.0)
+    assert len(group_policies(g1)) == len(DUAL_KINDS)
+    sweep_policies(tr, topo, g1, pm)                       # warm-up
+    with count_compiles() as cc:
+        out = sweep_policies(tr, topo, grid(3.0), pm)
+    assert cc.count == 0, \
+        f"numeric policy variants recompiled {cc.count} programs"
+    assert set(out) == set(grid(3.0))

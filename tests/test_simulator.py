@@ -86,8 +86,8 @@ def test_energy_conservation_per_link(topo, pm):
     net = S.init_net(topo.n_links, pol)
     net, (delivery, lat) = S.sim_chunk(net, msgs, pol, pm, topo.n_links)
     t_end = float(np.asarray(delivery).max()) + 1.0
-    tw, ts = S.close_out(net, t_end, pol, topo.n_links)
-    total = np.asarray(tw + ts)
+    tw, ts, ts2 = S.close_out(net, t_end, pol, topo.n_links)
+    total = np.asarray(tw + ts + ts2)
     t_end_eff = max(t_end, float(net["last_end"][:topo.n_links].max()))
     # misses extend a link's local timeline by t_w (+ unfinished t_s): allow
     # only overshoot, never undershoot, and bound it by n_wake*(t_w+t_s)
@@ -135,6 +135,103 @@ def test_deep_sleep_saves_more_than_fast_wake_when_idle(topo, pm):
     # ~all time asleep on ~all links: savings close to the power_frac ratio
     assert res["deep_sleep"].link_energy < 0.11 * base.link_energy
     assert res["deep_sleep"].asleep_frac > 0.99
+
+
+def test_dual_ladder_sits_between_single_states_when_idle(topo, pm):
+    """Long-idle trace: the Fast Wake -> Deep Sleep ladder saves more than
+    fast-wake-only (it demotes through the idle span) but less than
+    deep-sleep-only (it pays the fast floor for t_dst first), and the deep
+    row actually engages."""
+    nodes = np.arange(8, dtype=np.int64)
+    tr = Trace(nodes=nodes, name="idle")
+    tr.messages([[0, 1, 4096]])
+    tr.compute(2.0)
+    tr.messages([[0, 1, 4096]], barrier=True)
+
+    res = {}
+    for name, pol in {
+        "fw": Policy(kind="fixed", t_pdt=1e-6, sleep_state="fast_wake"),
+        "ds": Policy(kind="fixed", t_pdt=1e-6, sleep_state="deep_sleep"),
+        "dual": Policy(kind="dual", t_pdt=1e-6, t_dst=1e-2,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
+    }.items():
+        res[name], _ = S.simulate_trace(tr, topo, pol, pm)
+    assert res["dual"].deep_misses > 0
+    assert res["dual"].deep_frac > 0.9           # ~all idle past t_dst
+    assert res["ds"].link_energy < res["dual"].link_energy \
+        < res["fw"].link_energy
+    # the ladder's wake penalty is the deep row's (it wakes from deep)
+    assert res["dual"].makespan >= res["fw"].makespan
+
+
+def test_coalescing_defers_wake_by_max_delay(topo, pm):
+    """A frame hitting a sleeping port is held exactly ``max_delay`` per
+    asleep hop (first cycle: no burst history), trading that latency for
+    max_delay more sleep per hop."""
+    d = topo.nodes_per_group + 1                  # 5-hop inter-group route
+    base = dict(t_pdt=1e-6, t_dst=10.0, sleep_state="fast_wake",
+                deep_state="deep_sleep")
+    dual = Policy(kind="dual", **base)
+    D = 1e-4
+    coal = Policy(kind="coalesce", max_delay=D, max_frames=8, **base)
+    nodes = np.arange(topo.n_nodes, dtype=np.int64)
+    tr = Trace(nodes=nodes, name="t")
+    tr.messages([[0, d, 4096]])
+    tr.compute(np.where(nodes == 0, 1.0, 0.0))
+    tr.messages([[0, d, 4096]], barrier=True)
+    r_dual, _ = S.simulate_trace(tr, topo, dual, pm)
+    r_coal, _ = S.simulate_trace(tr, topo, coal, pm)
+    np.testing.assert_allclose(r_coal.max_latency - r_dual.max_latency,
+                               5 * D, rtol=1e-6)
+    # the deferred span is slept through, not idled through: the extra
+    # makespan costs far less than it would at full wake power (links are
+    # at the fast-wake floor; sim-end boundary effects allow a margin)
+    extra_full_wake = 2 * pm.port_power * topo.n_links \
+        * (r_coal.makespan - r_dual.makespan)
+    assert r_coal.link_energy - r_dual.link_energy < 0.5 * extra_full_wake
+    assert r_coal.asleep_frac > 0.999
+
+
+def test_perfbound_dual_recovers_from_never_demote(topo, pm):
+    """Regression: the adaptive demotion threshold legitimately swings
+    between +inf ('never demote' — short-gap history with no amortizing
+    tail) and finite once a tail forms.  The deadline2 carry must survive
+    that inf -> finite transition (a scatter-ADD would latch it at NaN
+    and silently disable the deep row forever)."""
+    pol = Policy(kind="perfbound_dual", bound=0.01, t_dst=2e-4,
+                 sleep_state="fast_wake", deep_state="deep_sleep",
+                 hist_bin_width=1e-3, hist_bins=60)
+    nodes = np.arange(2, dtype=np.int64)
+    tr = Trace(nodes=nodes, name="t")
+    # gaps far below the first bin CENTER: every suffix residual is
+    # negative, no bin is feasible, tdst_select returns +inf
+    for _ in range(20):                  # short-gap regime: tdst -> inf
+        tr.messages([[0, 1, 4096]])
+        tr.compute(2e-4)
+    for _ in range(20):                  # long-tail regime: tdst finite
+        tr.messages([[0, 1, 4096]])
+        tr.compute(50e-3)
+    tr.barrier()
+    r, _ = S.simulate_trace(tr, topo, pol, pm)
+    assert r.deep_misses > 0, \
+        "deep row never re-engaged after a 'never demote' period"
+    ref, _ = S.simulate_trace_reference(tr, topo, pol, pm)
+    assert r.as_dict() == ref.as_dict()
+
+
+def test_coalesce_max_frames_one_disables_deferral(topo, pm):
+    """max_frames=1 (a one-frame buffer) degenerates to the plain ladder."""
+    base = dict(t_pdt=1e-5, t_dst=2e-4, sleep_state="fast_wake",
+                deep_state="deep_sleep")
+    apps = small_apps(topo, n_nodes=8)
+    r_off, _ = S.simulate_trace(
+        apps["lammps"], topo,
+        Policy(kind="coalesce", max_delay=1e-4, max_frames=1, **base), pm)
+    r_dual, _ = S.simulate_trace(apps["lammps"], topo,
+                                 Policy(kind="dual", **base), pm)
+    np.testing.assert_allclose(r_off.makespan, r_dual.makespan, rtol=1e-12)
+    np.testing.assert_allclose(r_off.link_energy, r_dual.link_energy,
+                               rtol=1e-12)
 
 
 def test_makespan_includes_compute_and_barriers(topo, pm):

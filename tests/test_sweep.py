@@ -11,7 +11,8 @@ from repro.traffic.trace import Trace
 
 CHECK_FIELDS = ("makespan", "mean_latency", "max_latency", "n_messages",
                 "link_energy", "switch_energy", "node_energy", "total_energy",
-                "asleep_frac", "n_wake_transitions", "hits", "misses")
+                "asleep_frac", "deep_frac", "n_wake_transitions", "hits", "misses",
+                "deep_misses")
 
 
 def _mini_trace(topo, n=12, seed=3):
@@ -61,6 +62,22 @@ GRID = {
                              hist_decay=0.98, sleep_state="deep_sleep"),
     "pbc/fw/decay9": Policy(kind="perfbound_correct", bound=0.02,
                             hist_decay=0.9, sleep_state="fast_wake"),
+    # dual-mode FSM kinds (DESIGN.md §6): two lanes per kind so the batch
+    # axis carries genuinely different ladder/coalescing numerics
+    "dual/fast": Policy(kind="dual", t_pdt=1e-5, t_dst=5e-5,
+                        sleep_state="fast_wake", deep_state="deep_sleep"),
+    "dual/slow": Policy(kind="dual", t_pdt=1e-4, t_dst=2e-3,
+                        sleep_state="fast_wake", deep_state="deep_sleep"),
+    "coal/on": Policy(kind="coalesce", t_pdt=1e-5, t_dst=2e-4,
+                      max_delay=5e-5, max_frames=8,
+                      sleep_state="fast_wake", deep_state="deep_sleep"),
+    "coal/off": Policy(kind="coalesce", t_pdt=1e-5, t_dst=2e-4,
+                       max_delay=5e-5, max_frames=1,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
+    "pbd/1pct": Policy(kind="perfbound_dual", bound=0.01,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
+    "pbd/5pct": Policy(kind="perfbound_dual", bound=0.05, t_dst=1e-4,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
 }
 
 
@@ -175,7 +192,8 @@ def test_sweep_handles_baseline_name_collision(topo, pm):
 
 
 @pytest.mark.parametrize("name", ["none", "fixed/ds/100us", "fixed/ds/0",
-                                  "pb/ds/1pct", "pbc/ds/1pct"])
+                                  "pb/ds/1pct", "pbc/ds/1pct", "dual/fast",
+                                  "coal/on", "pbd/1pct"])
 def test_close_out_accounts_full_makespan(topo, pm, name):
     """After close_out, time_wake + time_sleep ≈ makespan on every link
     (overshoot only, bounded by the wake/sleep transition extensions)."""
@@ -205,14 +223,17 @@ def test_close_out_accounts_full_makespan(topo, pm, name):
 
     t_end = float(ready[tr.nodes].max())
     np.testing.assert_allclose(t_end, res.makespan, rtol=1e-12)
-    tw, ts = (np.asarray(x) for x in
-              S.close_out(net, t_end, pol, topo.n_links))
-    assert (tw >= -1e-12).all() and (ts >= -1e-12).all()
-    over = (tw + ts) - max(t_end, float(net["last_end"]
-                                        [:topo.n_links].max()))
+    tw, ts, ts2 = (np.asarray(x) for x in
+                   S.close_out(net, t_end, pol, topo.n_links))
+    assert (tw >= -1e-12).all() and (ts >= -1e-12).all() \
+        and (ts2 >= -1e-12).all()
+    over = (tw + ts + ts2) - max(t_end, float(net["last_end"]
+                                              [:topo.n_links].max()))
     assert (over > -1e-9).all(), "undershoot: unaccounted link time"
     bound = np.asarray(net["n_wake"][:topo.n_links]) * \
-        (pol.state.t_w + pol.sync_overhead + pol.state.t_s) + 1e-9
+        (pol.state.t_w + pol.sync_overhead + pol.state.t_s) + \
+        np.asarray(net["n_deep"][:topo.n_links]) * \
+        (pol.deep.t_w + pol.sync_overhead + pol.deep.t_s) + 1e-9
     assert (over <= bound).all(), "overshoot beyond transition extensions"
 
 
