@@ -1,0 +1,59 @@
+"""Auto-tuner throughput: the per-scenario frontier search end to end.
+
+Measures what the tuning subsystem costs on top of a plain suite sweep:
+wall time for (coarse grid + successive-halving refinement rounds) over a
+scenario set, cells/s across all rounds, and — the cache contract — the
+per-round compile counts.  The warm pass of the ``BENCH_tuner.json``
+record must compile ZERO programs (the search is deterministic, so every
+round's (T, B) program shapes repeat); ``check_compiles.py`` guards that
+against ``baselines/compile_counts.json`` in the bench-smoke CI job.
+
+Scales:
+  * tiny  — the 4-scenario dc-* stack x the 10-candidate ``tiny_space``,
+    2 rounds, 8-node allocations on the 12-node Megafly (CI smoke).
+  * small — the dc-* + hpc-* families x the full ``default_space``,
+    3 rounds on the 80-node Megafly.
+  * paper — the whole catalog at 64-node allocations on the 4160-node
+    Megafly.
+"""
+from __future__ import annotations
+
+from benchmarks.common import PM, Row, get_topo, timed
+from repro import tuning
+
+
+def _setup(scale: str):
+    if scale == "tiny":
+        return (["dc-poisson", "dc-hotspot", "dc-onoff", "dc-incast"], 8,
+                tuning.tiny_space(), 2)
+    if scale == "paper":
+        return None, 64, tuning.default_space(), 3
+    return (["dc-poisson", "dc-hotspot", "dc-onoff", "dc-incast",
+             "hpc-stencil3d", "hpc-stencil2d", "hpc-spectral"], None,
+            tuning.default_space(), 3)
+
+
+def n_policies(scale: str) -> int:
+    return len(tuning.space_candidates(_setup(scale)[2])[0])
+
+
+def run(scale: str):
+    topo = get_topo(scale)
+    names, n_nodes, space, rounds = _setup(scale)
+    report, us = timed(tuning.tune_scenarios, topo, names,
+                       budget_pct=1.0, rounds=rounds, space=space,
+                       keep=3, n_nodes=n_nodes, pm=PM)
+    cells = sum(r["cells"] for r in report.rounds)
+    compiles = [r["compiles"] for r in report.rounds]
+    rows = [Row("tuner/search", us,
+                f"{len(report.scenarios)}scen_{cells}cells_"
+                f"{cells / (us / 1e6):.2f}cells_per_s_"
+                f"compiles{'-'.join(map(str, compiles))}")]
+    for sc, t in report.scenarios.items():
+        w = t.winner
+        rows.append(Row(
+            f"tuner/{sc}", us / len(report.scenarios),
+            f"winner={w.name}_"
+            f"linksaved{w.row['link_energy_saved_pct']:.2f}pct_"
+            f"ovh{w.degradation:.3f}pct_frontier{len(t.frontier)}"))
+    return rows

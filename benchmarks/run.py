@@ -32,6 +32,7 @@ MODULES = [
     ("llm_traffic", "benchmarks.bench_llm_traffic"),       # beyond paper
     ("topology", "benchmarks.bench_topology"),             # beyond paper
     ("scenario_suite", "benchmarks.bench_scenario_suite"),  # beyond paper
+    ("tuner", "benchmarks.bench_tuner"),                   # beyond paper
 ]
 
 

@@ -3,8 +3,11 @@
 ``count_compiles()`` taps ``jax.monitoring`` for backend-compile events so
 the benchmark driver can report how many XLA programs a run built (the
 perf-trajectory JSON in ``benchmarks/run.py``) and the test-suite can
-assert that warm plan replays compile NOTHING.  Transfer elimination is
-pinned separately with ``jax.transfer_guard`` (see tests/test_plan.py).
+assert that warm plan replays compile NOTHING.  ``compile_guard()`` turns
+that assertion into a hard runtime error for regions that MUST stay
+program-cache-hot (warm auto-tuner rounds, warm bench passes).  Transfer
+elimination is pinned separately with ``jax.transfer_guard`` (see
+tests/test_plan.py).
 """
 from __future__ import annotations
 
@@ -46,3 +49,24 @@ def count_compiles():
     """
     _install()
     yield CompileCount(_state["n"])
+
+
+class CompileGuardError(RuntimeError):
+    """A guarded region built more XLA programs than its budget allows."""
+
+
+@contextlib.contextmanager
+def compile_guard(what: str = "guarded region", budget: int = 0):
+    """Fail loudly when a region compiles more than ``budget`` programs.
+
+    The hard-error sibling of ``count_compiles`` for code paths whose whole
+    point is program-cache reuse: warm replay loops, the auto-tuner's warm
+    refinement rounds.  Yields the live counter so callers can also record
+    the observed count.
+    """
+    with count_compiles() as cc:
+        yield cc
+    if cc.count > budget:
+        raise CompileGuardError(
+            f"{what} compiled {cc.count} XLA programs "
+            f"(budget {budget}) — a plan/program cache went cold")

@@ -109,6 +109,69 @@ def sweep_policies(trace, topo, policies: dict, pm: PowerModel | None = None,
 # ---------------------------------------------------------------------------
 
 
+def sweep_cells(traces: dict, topo, cells: dict,
+                pm: PowerModel | None = None,
+                max_group: int | None = None) -> dict:
+    """Evaluate a RAGGED (trace x policy) grid, batched along both axes.
+
+    ``cells`` maps each trace name to its own {policy_name: Policy} dict —
+    the general case of :func:`sweep_scenarios`, where different traces may
+    request different policy subsets (the auto-tuner's refinement rounds
+    keep only the surviving (scenario, static-group) cells).  Policies
+    sharing a name across traces must be equal — a name is one grid column.
+
+    Batching stays maximal despite the raggedness: traces stack by compiled
+    plan shape exactly as in ``sweep_scenarios``, and within a stack each
+    static policy group replays the UNION of the stack's requested lanes in
+    one vmapped program per segment shape (the B policy axis is shared by
+    every trace lane of a program, so evaluating a superset costs vmap
+    lanes, not programs).  Only the requested cells are summarized and
+    returned: ``{trace_name: {policy_name: SimResult}}`` in the callers'
+    insertion orders, every cell bit-identical to that trace's own serial
+    ``simulator.simulate_trace``.
+
+    ``max_group`` caps the policy-batch width exactly as in
+    ``sweep_policies``; device memory scales with T x B lanes.
+    """
+    pm = pm or PowerModel()
+    tnames = list(cells)
+    for tn in tnames:
+        for pn, pol in cells[tn].items():
+            first = next(c[pn] for c in cells.values() if pn in c)
+            assert pol == first, \
+                f"policy {pn!r} differs across traces (one name, one column)"
+    plans = [compile_plan(traces[n], topo) for n in tnames]
+    out: dict = {n: {} for n in tnames}
+    for idx in group_stackable(plans):
+        batch = stack_plans([plans[i] for i in idx],
+                            [tnames[i] for i in idx])
+        union: dict = {}
+        for gi in idx:
+            union.update(cells[tnames[gi]])
+        for pnames in group_policies(union):
+            cap = max_group or len(pnames)
+            for i in range(0, len(pnames), cap):
+                chunk = pnames[i:i + cap]
+                pols = [union[n] for n in chunk]
+                nets, t_end, lat_sum, lat_max = replay.replay_plans(
+                    batch, pols, pm)
+                # one readback for the whole (T, B) grid: per-cell host
+                # numpy views, not one tiny sliced device program per cell
+                nets = jax.tree.map(np.asarray, nets)
+                for ti, gi in enumerate(idx):
+                    want = cells[tnames[gi]]
+                    for b, pname in enumerate(chunk):
+                        if pname not in want:
+                            continue
+                        net_tb = jax.tree.map(lambda x: x[ti, b], nets)
+                        out[tnames[gi]][pname] = S.summarize(
+                            net_tb, float(t_end[ti, b]),
+                            float(batch.busy[ti]),
+                            float(lat_sum[ti, b]), float(lat_max[ti, b]),
+                            int(batch.n_msgs[ti]), pols[b], pm, topo)
+    return {tn: {pn: out[tn][pn] for pn in cells[tn]} for tn in cells}
+
+
 def sweep_scenarios(traces: dict, topo, policies: dict,
                     pm: PowerModel | None = None,
                     max_group: int | None = None) -> dict:
@@ -126,34 +189,11 @@ def sweep_scenarios(traces: dict, topo, policies: dict,
 
     Returns ``{trace_name: {policy_name: SimResult}}`` in the callers'
     insertion orders; every cell is bit-identical to that trace's own
-    serial ``simulator.simulate_trace`` under the same policy.
+    serial ``simulator.simulate_trace`` under the same policy.  The
+    rectangular case of :func:`sweep_cells`.
 
     ``max_group`` caps the policy-batch width exactly as in
     ``sweep_policies``; device memory scales with T x B lanes.
     """
-    pm = pm or PowerModel()
-    tnames = list(traces)
-    plans = [compile_plan(traces[n], topo) for n in tnames]
-    out: dict = {n: {} for n in tnames}
-    for idx in group_stackable(plans):
-        batch = stack_plans([plans[i] for i in idx],
-                            [tnames[i] for i in idx])
-        for pnames in group_policies(policies):
-            cap = max_group or len(pnames)
-            for i in range(0, len(pnames), cap):
-                chunk = pnames[i:i + cap]
-                pols = [policies[n] for n in chunk]
-                nets, t_end, lat_sum, lat_max = replay.replay_plans(
-                    batch, pols, pm)
-                # one readback for the whole (T, B) grid: per-cell host
-                # numpy views, not one tiny sliced device program per cell
-                nets = jax.tree.map(np.asarray, nets)
-                for ti, gi in enumerate(idx):
-                    for b, pname in enumerate(chunk):
-                        net_tb = jax.tree.map(lambda x: x[ti, b], nets)
-                        out[tnames[gi]][pname] = S.summarize(
-                            net_tb, float(t_end[ti, b]),
-                            float(batch.busy[ti]),
-                            float(lat_sum[ti, b]), float(lat_max[ti, b]),
-                            int(batch.n_msgs[ti]), pols[b], pm, topo)
-    return {tn: {pn: out[tn][pn] for pn in policies} for tn in traces}
+    return sweep_cells(traces, topo, {tn: policies for tn in traces},
+                       pm, max_group=max_group)

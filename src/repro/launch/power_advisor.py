@@ -18,6 +18,12 @@ Traffic attribution (architecture-true for this framework's sharding):
 
 Compute time per step = HLO_FLOPs / (devices x peak x MFU), so the trace's
 compute:communicate duty cycle matches the compiled job.
+
+Two front doors: ``advise`` evaluates a fixed policy grid for a compiled
+dry-run cell (above), and ``advise_scenario`` runs the full auto-tuner
+(``repro.tuning``) for a NAMED catalog workload class under a degradation
+budget — "my traffic looks like dc-onoff and I can afford 1%" comes back
+as tuned knob settings plus the frontier they sit on.
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ import numpy as np
 
 from repro.core.eee import Policy, PowerModel
 from repro.core.simulator import compare_policies
-from repro.topology.megafly import Megafly, paper_topology
+from repro.topology.megafly import Megafly, paper_topology, small_topology
 from repro.traffic import collectives as C
 from repro.traffic.trace import Trace
 
@@ -123,6 +129,48 @@ DEFAULT_POLICIES = {
 }
 
 
+def advise_scenario(scenario: str, *, budget_pct: float = 1.0,
+                    topo=None, n_nodes: int | None = None, rounds: int = 3,
+                    space=None, objective: str = "link_energy",
+                    pm: PowerModel | None = None) -> dict:
+    """Recommend a power policy for a named catalog workload class.
+
+    The scenario-name front door to the auto-tuner (``repro.tuning``):
+    an operator who knows their workload resembles e.g. ``dc-onoff`` and
+    can tolerate ``budget_pct`` percent slowdown gets back the tuned knob
+    settings plus the energy/degradation frontier those knobs sit on —
+    without a dry-run artifact.  Defaults to the 80-node small Megafly
+    (CPU-friendly); pass ``topo=paper_topology()`` for the §4 system.
+
+    Returns ``{'scenario', 'budget_pct', 'recommended', 'policy',
+    'frontier', 'rounds'}`` where ``policy`` is the winning
+    :class:`~repro.core.eee.Policy` (None when only the always-on
+    baseline fits the budget) and ``frontier`` rows carry the §4
+    percentages per non-dominated point.
+    """
+    from repro.scenarios import get_scenario
+    from repro.tuning import tune_scenarios
+    get_scenario(scenario)               # fail loudly on unknown names
+    topo = topo if topo is not None else small_topology()
+    report = tune_scenarios(topo, [scenario], budget_pct=budget_pct,
+                            rounds=rounds, space=space, n_nodes=n_nodes,
+                            objective=objective, pm=pm)
+    tuning = report.scenarios[scenario]
+    w = tuning.winner
+    return {
+        "scenario": scenario,
+        "budget_pct": budget_pct,
+        "recommended": w.name,
+        "policy": w.policy,
+        "row": w.row,
+        "frontier": [{"policy": p.name, "degradation_pct": p.degradation,
+                      **{k: p.row[k] for k in ("energy_saved_pct",
+                                               "link_energy_saved_pct")}}
+                     for p in tuning.frontier],
+        "rounds": report.rounds,
+    }
+
+
 def advise(arch: str, shape: str, mesh: str = "16x16", *,
            policies: dict | None = None, n_steps: int = 3,
            mfu: float = 0.4, max_overhead_pct: float = 1.0,
@@ -153,12 +201,38 @@ def advise(arch: str, shape: str, mesh: str = "16x16", *,
 def main():
     import argparse
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="dry-run cell mode: compiled-job architecture")
+    ap.add_argument("--scenario", default=None, metavar="NAME",
+                    help="catalog mode: tune for a named workload class "
+                         "(repro.scenarios catalog) instead of a dry-run "
+                         "cell")
+    ap.add_argument("--budget", type=float, default=1.0, metavar="PCT",
+                    help="scenario mode: max exec overhead in percent")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="scenario mode: tuner search rounds")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--steps", type=int, default=3)
     ap.add_argument("--max-overhead-pct", type=float, default=1.0)
     args = ap.parse_args()
+    if (args.arch is None) == (args.scenario is None):
+        ap.error("pass exactly one of --arch (dry-run cell) or "
+                 "--scenario (catalog workload)")
+    if args.scenario:
+        out = advise_scenario(args.scenario, budget_pct=args.budget,
+                              rounds=args.rounds)
+        print(f"scenario: {out['scenario']}  "
+              f"budget <= {out['budget_pct']:g}% overhead")
+        for p in out["frontier"]:
+            print(f"  {p['policy']:34s} "
+                  f"ovh={p['degradation_pct']:7.3f}% "
+                  f"saved={p['energy_saved_pct']:6.2f}% "
+                  f"link_saved={p['link_energy_saved_pct']:6.2f}%")
+        print(f"recommended: {out['recommended']}")
+        if out["policy"] is not None:
+            print(f"  policy: {out['policy']}")
+        return
     out = advise(args.arch, args.shape, args.mesh, n_steps=args.steps,
                  max_overhead_pct=args.max_overhead_pct)
     print(f"cell: {out['cell']}")

@@ -17,11 +17,12 @@ from repro.scenarios.spec import (Scenario, build_trace,  # noqa: F401
                                   builder, builder_names, params_of, rng,
                                   trace_cache_clear)
 from repro.scenarios.suite import (default_policy_grid,  # noqa: F401
-                                   format_table, run_suite, table_rows)
+                                   evaluate_grid, format_table, run_suite,
+                                   table_rows)
 
 __all__ = [
     "Scenario", "build_trace", "builder", "builder_names", "params_of",
     "rng", "trace_cache_clear", "catalog", "get_scenario", "list_scenarios",
-    "register_scenario", "default_policy_grid", "format_table", "run_suite",
-    "table_rows",
+    "register_scenario", "default_policy_grid", "evaluate_grid",
+    "format_table", "run_suite", "table_rows",
 ]

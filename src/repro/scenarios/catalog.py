@@ -13,12 +13,22 @@ Twelve named scenarios spanning four families (see README for the table):
 Default allocations are 16 nodes (runs on every topology from the 80-node
 small Megafly up); ``Scenario.scaled(n)`` rescales any entry — builders
 re-derive internal structure (e.g. the parallelism grid) from ``n``.
+
+The catalog is the unit the policy auto-tuner (``repro.tuning``) consumes:
+``tune_catalog`` searches the policy space per entry and hands back each
+workload's energy/degradation frontier and budget winner, so every entry
+here doubles as a named workload class an operator can ask
+``launch.power_advisor`` about by name.
 """
 from __future__ import annotations
 
 from repro.scenarios import apps, hpc, ml, stochastic  # noqa: F401 (builders)
 from repro.scenarios.registry import register_scenario
 from repro.scenarios.spec import Scenario, params_of
+
+# Display/report ordering of the scenario families (suite tables, tuner
+# reports, the experiments scripts' --families flag).
+FAMILIES = ("ml", "hpc", "dc", "app")
 
 CATALOG = [
     # -- ML training (from configs/*) -------------------------------------

@@ -66,6 +66,29 @@ def resolve(scenarios: Optional[Iterable[Union[str, Scenario]]] = None,
     return specs
 
 
+def evaluate_grid(traces: Dict, topo, policies: Dict,
+                  pm: Optional[PowerModel] = None,
+                  max_group: Optional[int] = None):
+    """Sweep (traces x policies) with a hidden always-on baseline lane.
+
+    The shared front half of :func:`run_suite` and the policy auto-tuner
+    (``repro.tuning``): the baseline policy rides the batched grid as its
+    own static group, stacked over every trace like any other lane, and
+    comes back separated so callers can report each trace against ITS OWN
+    baseline (the paper's protocol) — or keep the raw ``SimResult`` cells.
+
+    Returns ``(base, results)`` — ``{trace: SimResult}`` for the baseline
+    and ``{trace: {policy: SimResult}}`` for the grid.
+    """
+    pm = pm or PowerModel()
+    base_key = unused_key(policies)
+    grid = sweep_scenarios(traces, topo,
+                           {base_key: _BASELINE_POLICY, **policies},
+                           pm, max_group=max_group)
+    base = {sc: res.pop(base_key) for sc, res in grid.items()}
+    return base, grid
+
+
 def run_suite(topo, scenarios=None, policies: Optional[Dict] = None,
               pm: Optional[PowerModel] = None, n_nodes: Optional[int] = None,
               max_group: Optional[int] = None, baseline: str = "baseline"
@@ -82,15 +105,10 @@ def run_suite(topo, scenarios=None, policies: Optional[Dict] = None,
         else default_policy_grid()
     specs = resolve(scenarios, n_nodes)
     traces = {name: build_trace(spec, topo) for name, spec in specs.items()}
-    base_key = unused_key(policies)
-    grid = sweep_scenarios(traces, topo,
-                           {base_key: _BASELINE_POLICY, **policies},
-                           pm, max_group=max_group)
-    out: Dict[str, Dict[str, dict]] = {}
-    for sc, res in grid.items():
-        base = res.pop(base_key)
-        out[sc] = relative_rows(base, res, baseline)
-    return out
+    base, grid = evaluate_grid(traces, topo, policies, pm,
+                               max_group=max_group)
+    return {sc: relative_rows(base[sc], res, baseline)
+            for sc, res in grid.items()}
 
 
 CSV_FIELDS = ("makespan", "exec_overhead_pct", "mean_latency",

@@ -1,0 +1,35 @@
+"""Scenario-driven policy auto-tuning (DESIGN.md §7).
+
+Public surface:
+
+* :func:`~repro.tuning.tuner.tune_catalog` /
+  :func:`~repro.tuning.tuner.tune_scenarios` — batched per-scenario
+  frontier search under a degradation budget, riding the compiled
+  (scenario × policy) grid pipeline;
+* :class:`~repro.tuning.tuner.TuneReport` /
+  :class:`~repro.tuning.tuner.ScenarioTuning` + ``format_report`` /
+  ``report_rows`` — results and tables;
+* :mod:`~repro.tuning.space` — the per-kind search space (coarse grids +
+  successive-halving refinement): ``default_space`` / ``tiny_space`` /
+  ``KindSpace`` / ``Knob``;
+* :mod:`~repro.tuning.frontier` — the pure, property-tested selection
+  math: ``TunePoint`` / ``pareto_frontier`` / ``budget_winner`` /
+  ``select_survivors``.
+"""
+from repro.tuning.frontier import (BASELINE_NAME, TunePoint,  # noqa: F401
+                                   budget_winner, dominates,
+                                   pareto_frontier, rank_candidates,
+                                   select_survivors)
+from repro.tuning.space import (KindSpace, Knob,  # noqa: F401
+                                default_space, space_candidates, tiny_space)
+from repro.tuning.tuner import (OBJECTIVES, ScenarioTuning,  # noqa: F401
+                                TuneReport, format_report, report_rows,
+                                tune_catalog, tune_scenarios)
+
+__all__ = [
+    "BASELINE_NAME", "TunePoint", "budget_winner", "dominates",
+    "pareto_frontier", "rank_candidates", "select_survivors",
+    "KindSpace", "Knob", "default_space", "space_candidates", "tiny_space",
+    "OBJECTIVES", "ScenarioTuning", "TuneReport", "format_report",
+    "report_rows", "tune_catalog", "tune_scenarios",
+]

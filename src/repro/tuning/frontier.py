@@ -1,0 +1,101 @@
+"""Pure frontier/selection math for the policy auto-tuner.
+
+Everything in this module is plain-Python over :class:`TunePoint` values —
+no JAX, no simulation — so the tuner's decision logic (Pareto dominance,
+budget-constrained winner selection, successive-halving survivor ranking)
+is directly property-testable (``tests/test_tuning.py`` drives it with
+hypothesis): the frontier is non-dominated and sorted, the winner never
+violates the budget, and adding points never makes the winner worse.
+
+Conventions: ``degradation`` is the §4 execution-time overhead in percent
+vs the scenario's own always-on baseline (lower is better, 0 for the
+baseline itself); ``energy`` is the objective energy in joules (lower is
+better).  Ties break deterministically by (values, name) so a warm tuner
+rerun reproduces the cold run's decisions bit for bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional
+
+BASELINE_NAME = "baseline"
+
+
+@dataclass(frozen=True)
+class TunePoint:
+    """One evaluated (policy, scenario) cell in objective space."""
+    name: str
+    degradation: float           # exec overhead % vs the scenario baseline
+    energy: float                # objective energy (J), lower is better
+    round: int = 0               # search round that produced the point
+    policy: object = None        # the Policy (None for synthetic test points)
+    row: dict = field(default=None, compare=False, repr=False)  # full table row
+
+    def _key(self):
+        return (self.degradation, self.energy, self.name)
+
+
+def dominates(a: TunePoint, b: TunePoint) -> bool:
+    """True when ``a`` is at least as good on both axes and better on one."""
+    return (a.degradation <= b.degradation and a.energy <= b.energy
+            and (a.degradation < b.degradation or a.energy < b.energy))
+
+
+def pareto_frontier(points: Iterable[TunePoint]) -> List[TunePoint]:
+    """Non-dominated subset, sorted by ascending degradation.
+
+    One linear scan over the (degradation, energy, name)-sorted points
+    keeps every point that strictly improves the best energy seen so far;
+    of coincident (degradation, energy) pairs the lexicographically first
+    name survives.  The result's energies are strictly decreasing, so the
+    frontier reads as "each extra unit of degradation buys this much
+    energy".
+    """
+    out: List[TunePoint] = []
+    best = float("inf")
+    for p in sorted(points, key=TunePoint._key):
+        if p.energy < best:
+            out.append(p)
+            best = p.energy
+    return out
+
+
+def budget_winner(points: Iterable[TunePoint],
+                  budget: float) -> Optional[TunePoint]:
+    """Lowest-energy point with degradation <= ``budget`` (then lowest
+    degradation, then name, as deterministic tie-breaks).  ``None`` when
+    nothing is feasible — callers that seed the always-on baseline point
+    (degradation 0) always get a winner for any budget >= 0.
+    """
+    feasible = [p for p in points if p.degradation <= budget]
+    if not feasible:
+        return None
+    return min(feasible, key=lambda p: (p.energy, p.degradation, p.name))
+
+
+def rank_candidates(points: Iterable[TunePoint],
+                    budget: float) -> List[TunePoint]:
+    """Successive-halving ranking: budget-feasible points first (by energy,
+    the winner objective), then infeasible ones by how close they are to
+    feasibility (degradation, then energy) — an infeasible region is still
+    worth refining toward the boundary when nothing else saves more."""
+    feasible, infeasible = [], []
+    for p in points:
+        (feasible if p.degradation <= budget else infeasible).append(p)
+    feasible.sort(key=lambda p: (p.energy, p.degradation, p.name))
+    infeasible.sort(key=lambda p: (p.degradation, p.energy, p.name))
+    return feasible + infeasible
+
+
+def select_survivors(points: Iterable[TunePoint], budget: float,
+                     keep: int) -> List[TunePoint]:
+    """The top ``keep`` candidates a halving round refines around.
+
+    The synthetic baseline point is never a survivor — it has no knobs to
+    refine — but it stays in the pool every round, so the winner can
+    always fall back to "don't power manage" under an infeasibly tight
+    budget.
+    """
+    ranked = [p for p in rank_candidates(points, budget)
+              if p.name != BASELINE_NAME]
+    return ranked[:max(keep, 0)]

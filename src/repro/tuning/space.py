@@ -1,0 +1,203 @@
+"""Policy search space: per-kind coarse grids + successive-halving refinement.
+
+A :class:`KindSpace` pairs a base :class:`~repro.core.eee.Policy` (the
+static structure plus any pinned numerics) with the :class:`Knob` s the
+tuner may turn.  The coarse grid (round 0) is the cross product of every
+knob's ``coarse`` values; refinement rounds generate AXIS-WISE
+multiplicative neighbours around each survivor — knob ``k`` at value ``v``
+proposes ``v/f`` and ``v*f`` with the factor shrinking geometrically per
+round (``f_r = step ** 0.5**r``: ~3.16x then ~1.78x for the step=10
+timer knobs, 2x then ~1.41x for step=4), narrowing toward the optimum
+without the cross-product blow-up; more ``rounds`` buy finer resolution
+at ~sqrt rate per round.
+
+Everything here is static structure from the sweep engine's point of view:
+every candidate of a KindSpace shares ``eee.static_key`` with its base, so
+a whole coarse grid or refinement wave replays as lanes of ONE compiled
+program per plan shape (DESIGN.md §7).
+
+Candidate names are pure functions of (kind label, knob values) — the same
+parameter point proposed twice (two survivors refining into each other)
+dedupes by name, and a warm tuner rerun regenerates identical grids.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.core.eee import Policy, static_key
+
+
+def canon(v: float) -> float:
+    """Canonicalize a knob value to the candidate-NAME precision (%.6g).
+
+    Candidate identity is the formatted name, so values must be fixed
+    points of the formatting round-trip: two refinement paths that land
+    ulp-apart on "the same" parameter point (e.g. ``1e-6·√10·⁴√10`` vs
+    ``1e-5/⁴√10``) would otherwise share a name while carrying unequal
+    Policies — and ``sweep_cells`` correctly rejects one name mapping to
+    two policies across traces."""
+    return float(f"{v:.6g}")
+
+
+@dataclass(frozen=True)
+class Knob:
+    """One tunable numeric Policy field."""
+    field: str
+    coarse: Tuple[float, ...]      # round-0 grid values
+    step: float = 10.0             # coarse spacing ratio; refinement factor
+    #                                for round r is step ** 0.5**r
+    lo: float = 0.0                # clamp range for refined values
+    hi: float = float("inf")
+    integer: bool = False          # round refined values (e.g. max_frames)
+
+    def refine_factor(self, round_idx: int) -> float:
+        return self.step ** (0.5 ** max(round_idx, 1))
+
+    def clamp(self, v: float):
+        """Bound to [lo, hi] and canonicalize to name precision — every
+        value that enters a candidate (coarse or refined) passes through
+        here, so name identity implies value identity."""
+        v = min(max(v, self.lo), self.hi)
+        return max(int(round(v)), 1) if self.integer else canon(float(v))
+
+
+@dataclass(frozen=True)
+class KindSpace:
+    """The searchable neighbourhood of one policy kind (one static group)."""
+    label: str                     # grid-name prefix, e.g. "fixed-fw"
+    base: Policy                   # static structure + pinned numerics
+    knobs: Tuple[Knob, ...] = ()
+
+    def make(self, values: Dict[str, float]) -> Tuple[str, Policy]:
+        """(candidate name, Policy) for one knob assignment."""
+        pol = dataclasses.replace(self.base, **values) if values \
+            else self.base
+        args = ",".join(f"{k.field}={values[k.field]:.6g}"
+                        for k in self.knobs)
+        return (f"{self.label}({args})" if args else self.label), pol
+
+    def coarse_grid(self) -> Dict[str, Tuple[Policy, Dict[str, float]]]:
+        """{name: (policy, knob assignment)} — the round-0 cross product."""
+        out = {}
+        axes = [[(k.field, k.clamp(v)) for v in k.coarse]
+                for k in self.knobs]
+        for combo in itertools.product(*axes) if axes else [()]:
+            values = dict(combo)
+            name, pol = self.make(values)
+            out[name] = (pol, values)
+        return out
+
+    def refine(self, values: Dict[str, float], round_idx: int
+               ) -> Dict[str, Tuple[Policy, Dict[str, float]]]:
+        """Axis-wise neighbours of one survivor at round ``round_idx``
+        resolution: per knob, the survivor's value nudged down and up by
+        the round's (shrinking) factor, other knobs held.  2·K candidates
+        per survivor before clamping/dedup; never proposes the center
+        point itself (it is already evaluated)."""
+        out = {}
+        for k in self.knobs:
+            f = k.refine_factor(round_idx)
+            v = values[k.field]
+            for nv in (k.clamp(v / f), k.clamp(v * f)):
+                if nv == v:
+                    continue
+                nvals = dict(values, **{k.field: nv})
+                name, pol = self.make(nvals)
+                out[name] = (pol, nvals)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Built-in spaces
+# ---------------------------------------------------------------------------
+
+_LADDER = dict(sleep_state="fast_wake", deep_state="deep_sleep")
+
+_BOUNDS = (0.005, 0.01, 0.02, 0.05)
+_TPDTS = (1e-6, 1e-5, 1e-4, 1e-3)
+
+
+def default_space() -> List[KindSpace]:
+    """The full search space (35 candidates in 6 static groups).
+
+    Coarse grids deliberately contain the PR-4 suite's fixed grid points
+    (``fixed-fw-10us``, ``dual-10us-200us``, …) so the tuned winner can
+    never fall behind the best fixed-grid policy on any scenario — the
+    incumbent is always in round 0.  The seventh kind, ``none``, is not a
+    KindSpace: its parameterless single point IS the always-on baseline
+    lane the tuner already rides in every pool (``frontier.BASELINE_NAME``,
+    the guaranteed-feasible fallback) — listing it here would duplicate
+    that lane and waste a knob-less survivor slot in halving rounds.
+    """
+    return [
+        KindSpace("fixed-fw", Policy(kind="fixed", sleep_state="fast_wake"),
+                  (Knob("t_pdt", _TPDTS, lo=0.0, hi=1.0),)),
+        KindSpace("fixed-ds", Policy(kind="fixed", sleep_state="deep_sleep"),
+                  (Knob("t_pdt", _TPDTS, lo=0.0, hi=1.0),)),
+        KindSpace("pb", Policy(kind="perfbound", sleep_state="deep_sleep"),
+                  (Knob("bound", _BOUNDS, step=4.0, lo=1e-4, hi=0.5),)),
+        KindSpace("pbc", Policy(kind="perfbound_correct",
+                                sleep_state="deep_sleep"),
+                  (Knob("bound", _BOUNDS, step=4.0, lo=1e-4, hi=0.5),)),
+        KindSpace("dual", Policy(kind="dual", **_LADDER),
+                  (Knob("t_pdt", (1e-5, 1e-4), lo=0.0, hi=1.0),
+                   Knob("t_dst", (5e-5, 2e-4, 1e-3), step=4.0,
+                        lo=0.0, hi=1.0))),
+        KindSpace("coal", Policy(kind="coalesce", t_pdt=1e-5, **_LADDER),
+                  (Knob("t_dst", (2e-4,), step=4.0, lo=0.0, hi=1.0),
+                   Knob("max_delay", (1e-5, 5e-5, 2e-4), step=4.0,
+                        lo=0.0, hi=1e-2),
+                   Knob("max_frames", (8, 16, 32), step=4.0, lo=1, hi=4096,
+                        integer=True))),
+        KindSpace("pbd", Policy(kind="perfbound_dual", **_LADDER),
+                  (Knob("bound", _BOUNDS, step=4.0, lo=1e-4, hi=0.5),)),
+    ]
+
+
+def tiny_space() -> List[KindSpace]:
+    """A compact space (10 candidates) for CI smoke and tests — same
+    structure as ``default_space`` (every searched kind, every static
+    group; ``none`` again rides as the implicit baseline), minimal
+    lanes."""
+    return [
+        KindSpace("fixed-fw", Policy(kind="fixed", sleep_state="fast_wake"),
+                  (Knob("t_pdt", (1e-5, 1e-4), lo=0.0, hi=1.0),)),
+        KindSpace("fixed-ds", Policy(kind="fixed", sleep_state="deep_sleep"),
+                  (Knob("t_pdt", (1e-4,), lo=0.0, hi=1.0),)),
+        KindSpace("pb", Policy(kind="perfbound", sleep_state="deep_sleep"),
+                  (Knob("bound", (0.01,), step=4.0, lo=1e-4, hi=0.5),)),
+        KindSpace("pbc", Policy(kind="perfbound_correct",
+                                sleep_state="deep_sleep"),
+                  (Knob("bound", (0.01,), step=4.0, lo=1e-4, hi=0.5),)),
+        KindSpace("dual", Policy(kind="dual", **_LADDER),
+                  (Knob("t_pdt", (1e-5,), lo=0.0, hi=1.0),
+                   Knob("t_dst", (5e-5, 2e-4), step=4.0, lo=0.0, hi=1.0))),
+        KindSpace("coal", Policy(kind="coalesce", t_pdt=1e-5, t_dst=2e-4,
+                                 max_frames=16, **_LADDER),
+                  (Knob("max_delay", (5e-5,), step=4.0, lo=0.0, hi=1e-2),)),
+        KindSpace("pbd", Policy(kind="perfbound_dual", **_LADDER),
+                  (Knob("bound", (0.01, 0.05), step=4.0, lo=1e-4, hi=0.5),)),
+    ]
+
+
+def space_candidates(space: List[KindSpace]):
+    """Flatten a space's coarse grids: ``(policies, meta)`` where
+    ``policies`` is the round-0 {name: Policy} grid and ``meta`` maps each
+    name to its (KindSpace, knob assignment) for later refinement."""
+    from repro.tuning.frontier import BASELINE_NAME
+    policies: Dict[str, Policy] = {}
+    meta: Dict[str, Tuple[KindSpace, Dict[str, float]]] = {}
+    for ks in space:
+        for name, (pol, values) in ks.coarse_grid().items():
+            assert name not in policies, f"duplicate candidate {name!r}"
+            assert name != BASELINE_NAME, \
+                f"candidate label {name!r} would shadow the synthetic " \
+                f"always-on baseline point (the guaranteed budget fallback)"
+            assert static_key(pol) == static_key(ks.base), \
+                f"{name!r}: knob changed static structure"
+            policies[name] = pol
+            meta[name] = (ks, values)
+    return policies, meta

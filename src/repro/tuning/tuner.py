@@ -1,0 +1,250 @@
+"""Scenario-driven policy auto-tuner: batched frontier search under a
+degradation budget.
+
+The paper's deliverable is not a single policy — it is the claim that
+power-down must be *tuned to the workload* so energy saving comes with
+"minimal or no performance penalty".  This module closes that loop over
+the scenario catalog: given workloads and a degradation budget (percent
+execution-time overhead vs each workload's own always-on baseline),
+``tune_scenarios`` searches the whole policy space — all 7 kinds: six
+searched numeric parameter grids (``repro.tuning.space``) plus the
+seventh kind, ``none``, riding as the implicit always-on baseline lane of
+every pool — and returns, per scenario, (a) the energy/degradation
+Pareto frontier and (b) the minimum-energy policy that respects the
+budget.
+
+The search rides the compiled pipeline end to end — no Python-loop
+replays (DESIGN.md §7):
+
+* **round 0** seeds the coarse grid through
+  ``scenarios.suite.evaluate_grid`` → ``sweep.sweep_scenarios``: traces
+  stack by plan shape, each kind's grid is one batched lane group, the
+  always-on baseline rides along;
+* **halving rounds** keep the top ``keep`` candidates per scenario
+  (budget-feasible by energy first, ``frontier.rank_candidates``),
+  generate shrinking axis-wise neighbourhoods around the survivors
+  (``space.KindSpace.refine``), and re-stack ONLY the surviving
+  (scenario, static-group) cells through ``sweep.sweep_cells`` — one
+  compiled replay per plan-shape × static-group per round, with lane
+  unions shared across the stack.
+
+Every decision (survivor ranking, candidate naming, tie-breaks) is
+deterministic, so a warm rerun regenerates the exact same rounds and
+compiles ZERO programs — pinned by the per-round compile counts in the
+report and enforceable with ``compile_budget=0``
+(``core.instrument.compile_guard``).
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.eee import PowerModel
+from repro.core.instrument import compile_guard, count_compiles
+from repro.core.simulator import SimResult, relative_rows
+from repro.core.sweep import sweep_cells
+from repro.scenarios.spec import build_trace
+from repro.scenarios.suite import evaluate_grid, resolve
+from repro.tuning.frontier import (BASELINE_NAME, TunePoint, budget_winner,
+                                   pareto_frontier, select_survivors)
+from repro.tuning.space import default_space, space_candidates
+
+# SimResult fields that make sense as a minimization objective
+OBJECTIVES = ("link_energy", "total_energy")
+
+
+@dataclass
+class ScenarioTuning:
+    """One scenario's search outcome."""
+    scenario: str
+    budget_pct: float
+    objective: str
+    baseline: SimResult
+    points: Dict[str, TunePoint]         # every evaluated candidate + baseline
+    frontier: List[TunePoint] = field(default_factory=list)
+    winner: Optional[TunePoint] = None   # never None after finalize()
+
+    def finalize(self) -> "ScenarioTuning":
+        self.frontier = pareto_frontier(self.points.values())
+        self.winner = budget_winner(self.points.values(), self.budget_pct)
+        assert self.winner is not None, \
+            "baseline point missing: the budget winner must always exist"
+        return self
+
+
+@dataclass
+class TuneReport:
+    """Catalog-wide tuning outcome + per-round search accounting."""
+    budget_pct: float
+    objective: str
+    scenarios: Dict[str, ScenarioTuning]
+    rounds: List[dict]                   # {round, scenarios, cells, compiles}
+
+    @property
+    def round_compiles(self) -> List[int]:
+        return [r["compiles"] for r in self.rounds]
+
+    def winners(self) -> Dict[str, TunePoint]:
+        return {sc: t.winner for sc, t in self.scenarios.items()}
+
+
+def _points_from(results: Dict[str, SimResult], base: SimResult,
+                 policies: Dict, objective: str, round_idx: int
+                 ) -> Dict[str, TunePoint]:
+    """Lower a scenario's round results to objective-space points; the
+    table row (§4 protocol percentages) rides along for reporting."""
+    rows = relative_rows(base, results, BASELINE_NAME)
+    out = {}
+    for name, res in results.items():
+        out[name] = TunePoint(
+            name=name, degradation=rows[name]["exec_overhead_pct"],
+            energy=float(getattr(res, objective)), round=round_idx,
+            policy=policies[name], row=rows[name])
+    return out
+
+
+def _baseline_point(base: SimResult, objective: str) -> TunePoint:
+    row = relative_rows(base, {}, BASELINE_NAME)[BASELINE_NAME]
+    return TunePoint(name=BASELINE_NAME, degradation=0.0,
+                     energy=float(getattr(base, objective)), round=0,
+                     policy=None, row=row)
+
+
+def tune_scenarios(topo, scenarios=None, *, budget_pct: float = 1.0,
+                   rounds: int = 3, space=None, keep: int = 4,
+                   n_nodes: Optional[int] = None,
+                   max_group: Optional[int] = None,
+                   objective: str = "link_energy",
+                   pm: Optional[PowerModel] = None,
+                   compile_budget: Optional[int] = None) -> TuneReport:
+    """Search the policy space for every scenario, batched.
+
+    ``scenarios`` accepts catalog names / Scenario specs (default: the
+    whole catalog, as in ``scenarios.run_suite``); ``budget_pct`` is the
+    degradation budget (max execution-time overhead vs each scenario's own
+    baseline, in percent); ``rounds`` counts the coarse round plus
+    successive-halving refinements (3 → coarse + 2 refinements); ``keep``
+    is the per-scenario survivor count each halving round refines around;
+    ``objective`` is the SimResult energy field to minimize.
+
+    ``compile_budget`` (when not None) runs the WHOLE search under
+    ``instrument.compile_guard`` — pass 0 on a warm rerun to hard-assert
+    that every round reuses the cold run's programs.
+
+    Returns a :class:`TuneReport`; per-round compile counts land in
+    ``report.rounds`` so callers can pin cache behaviour.
+    """
+    pm = pm or PowerModel()
+    assert objective in OBJECTIVES, \
+        f"objective {objective!r} not in {OBJECTIVES}"
+    assert rounds >= 1 and keep >= 1 and budget_pct >= 0.0
+    space = space if space is not None else default_space()
+    specs = resolve(scenarios, n_nodes)
+    traces = {name: build_trace(spec, topo) for name, spec in specs.items()}
+    grid0, meta = space_candidates(space)
+
+    guard = (compile_guard("tune_scenarios", compile_budget)
+             if compile_budget is not None else contextlib.nullcontext())
+    round_log: List[dict] = []
+    with guard:
+        # ---- round 0: the coarse grid, every scenario ---------------------
+        with count_compiles() as cc:
+            base, res0 = evaluate_grid(traces, topo, grid0, pm,
+                                       max_group=max_group)
+        tunings = {}
+        for sc in traces:
+            points = {BASELINE_NAME: _baseline_point(base[sc], objective)}
+            points.update(_points_from(res0[sc], base[sc], grid0,
+                                       objective, 0))
+            tunings[sc] = ScenarioTuning(sc, budget_pct, objective,
+                                         base[sc], points)
+        round_log.append({"round": 0, "scenarios": len(traces),
+                          "cells": len(traces) * (len(grid0) + 1),
+                          "compiles": cc.count})
+
+        # ---- successive-halving refinement rounds -------------------------
+        for r in range(1, rounds):
+            cells: Dict[str, Dict] = {}
+            for sc, tuning in tunings.items():
+                survivors = select_survivors(tuning.points.values(),
+                                             budget_pct, keep)
+                fresh = {}
+                for s in survivors:
+                    ks, values = meta[s.name]
+                    for name, (pol, vals) in ks.refine(values, r).items():
+                        meta.setdefault(name, (ks, vals))
+                        if name not in tuning.points:
+                            fresh[name] = pol
+                if fresh:
+                    cells[sc] = fresh
+            if not cells:
+                break                    # every neighbourhood converged
+            with count_compiles() as cc:
+                res_r = sweep_cells({sc: traces[sc] for sc in cells}, topo,
+                                    cells, pm, max_group=max_group)
+            for sc, results in res_r.items():
+                tunings[sc].points.update(_points_from(
+                    results, base[sc], cells[sc], objective, r))
+            round_log.append({"round": r, "scenarios": len(cells),
+                              "cells": sum(map(len, cells.values())),
+                              "compiles": cc.count})
+
+    for tuning in tunings.values():
+        tuning.finalize()
+    return TuneReport(budget_pct, objective, tunings, round_log)
+
+
+def tune_catalog(topo, **kw) -> TuneReport:
+    """``tune_scenarios`` over the full built-in catalog (the repo's
+    "tell me your workload, I'll hand you the knob settings" entry point —
+    see also ``launch.power_advisor.advise_scenario`` for the one-scenario
+    recommendation wrapper)."""
+    return tune_scenarios(topo, None, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Reporting
+# ---------------------------------------------------------------------------
+
+CSV_FIELDS = ("scenario", "policy", "round", "degradation_pct",
+              "energy_J", "energy_saved_pct", "link_energy_saved_pct",
+              "on_frontier", "is_winner")
+
+
+def report_rows(report: TuneReport):
+    """Flatten a report's frontier + winner sets to CSV-ready dict rows."""
+    for sc, tuning in report.scenarios.items():
+        on_frontier = {p.name for p in tuning.frontier}
+        names = sorted(on_frontier | {tuning.winner.name},
+                       key=lambda n: tuning.points[n]._key())
+        for name in names:
+            p = tuning.points[name]
+            yield {"scenario": sc, "policy": name, "round": p.round,
+                   "degradation_pct": p.degradation, "energy_J": p.energy,
+                   "energy_saved_pct": p.row["energy_saved_pct"],
+                   "link_energy_saved_pct":
+                       p.row["link_energy_saved_pct"],
+                   "on_frontier": name in on_frontier,
+                   "is_winner": name == tuning.winner.name}
+
+
+def format_report(report: TuneReport) -> str:
+    """Human-readable per-scenario frontier/winner tables."""
+    lines = [f"budget <= {report.budget_pct:g}% exec overhead, "
+             f"objective = min {report.objective}"]
+    for sc, tuning in report.scenarios.items():
+        w = tuning.winner
+        lines.append(f"== {sc}")
+        lines.append(f"   winner: {w.name}  "
+                     f"(overhead {w.degradation:.3f}%, "
+                     f"link saved {w.row['link_energy_saved_pct']:.2f}%, "
+                     f"total saved {w.row['energy_saved_pct']:.2f}%)")
+        lines.append(f"   {'frontier policy':<34} {'overhead%':>10} "
+                     f"{'link_saved%':>12} {'saved%':>8} {'round':>6}")
+        for p in tuning.frontier:
+            lines.append(f"   {p.name:<34} {p.degradation:>10.3f} "
+                         f"{p.row['link_energy_saved_pct']:>12.2f} "
+                         f"{p.row['energy_saved_pct']:>8.2f} "
+                         f"{p.round:>6d}")
+    return "\n".join(lines)

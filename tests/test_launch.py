@@ -79,3 +79,27 @@ def test_advise_rejects_failed_cell(tmp_path):
     p.write_text(json.dumps({"status": "failed", "error": "x"}))
     with pytest.raises(ValueError):
         advise("bad", "train_4k", dryrun_dir=tmp_path)
+
+
+def test_advise_scenario_recommends_within_budget():
+    """The catalog front door of the auto-tuner: a scenario name + budget
+    in, a budget-respecting policy recommendation + frontier out."""
+    from repro.launch.power_advisor import advise_scenario
+    from repro.tuning import tiny_space
+    tiny = small_topology(n_groups=3, leaves=2, spines=2, nodes_per_leaf=2)
+    out = advise_scenario("dc-poisson", budget_pct=1.0, topo=tiny,
+                          n_nodes=8, rounds=1, space=tiny_space())
+    assert out["scenario"] == "dc-poisson" and out["budget_pct"] == 1.0
+    assert out["row"]["exec_overhead_pct"] <= 1.0
+    assert out["policy"] is not None           # a real Policy won
+    assert out["recommended"] != "baseline"
+    assert out["row"]["link_energy_saved_pct"] > 0.0
+    names = [p["policy"] for p in out["frontier"]]
+    assert out["recommended"] in names or "baseline" in names
+    assert out["rounds"][0]["cells"] > 0
+
+
+def test_advise_scenario_rejects_unknown_name():
+    from repro.launch.power_advisor import advise_scenario
+    with pytest.raises(KeyError, match="unknown scenario"):
+        advise_scenario("no-such-workload")

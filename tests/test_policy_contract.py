@@ -182,6 +182,53 @@ def _tiny_trace(topo, n=6):
     return tr
 
 
+def test_perfbound_dual_state_under_scenario_grid_batching(topo, pm):
+    """The PR-4 ``init_state`` gating contract, closed for the one cell it
+    left untested: ``perfbound_dual`` carries an EXTRA predictor vector
+    (the per-port adaptive ``t_dst``) that must batch per lane under the
+    (T, B) multi-trace grid — B > 1 lanes with different initial
+    t_dst/bound must not share state, its shape must track the (T, B, P)
+    grid like every other carry, and every grid cell must match its own
+    serial replay."""
+    import repro.scenarios as SC
+    from repro.core import replay
+    from repro.core.sweep import sweep_scenarios
+    from repro.traffic import plan as P
+
+    names = ["dc-poisson", "dc-onoff"]
+    traces = {n: SC.build_trace(SC.get_scenario(n).scaled(8), topo)
+              for n in names}
+    pols = {
+        "pbd/1pct": Policy(kind="perfbound_dual", bound=0.01, t_dst=1e-3,
+                           sleep_state="fast_wake",
+                           deep_state="deep_sleep"),
+        "pbd/5pct": Policy(kind="perfbound_dual", bound=0.05, t_dst=1e-4,
+                           sleep_state="fast_wake",
+                           deep_state="deep_sleep"),
+    }
+    assert len(group_policies(pols)) == 1
+
+    # the (T, B) initial carry: per-lane t_dst vectors, not shared state
+    plans = [P.compile_plan(traces[n], topo) for n in names]
+    batch = P.stack_plans(plans, names=names)
+    _, _, carry = replay.init_lanes_multi(list(pols.values()), batch)
+    pred = carry[0]["pred"]
+    T, B, Pn = 2, 2, topo.n_links + 1
+    assert pred["t_dst"].shape == (T, B, Pn)
+    assert pred["tpdt"].shape == (T, B, Pn)
+    t_dst0 = np.asarray(pred["t_dst"])
+    np.testing.assert_array_equal(t_dst0[:, 0], 1e-3)
+    np.testing.assert_array_equal(t_dst0[:, 1], 1e-4)
+
+    # and the full grid is bit-identical to per-cell serial replay
+    import repro.core.simulator as S
+    got = sweep_scenarios(traces, topo, pols, pm)
+    for tn, tr in traces.items():
+        for pn, pol in pols.items():
+            want, _ = S.simulate_trace(tr, topo, pol, pm)
+            assert got[tn][pn].as_dict() == want.as_dict(), f"{tn}/{pn}"
+
+
 def test_new_kinds_batch_and_warm_sweep_compiles_nothing(topo, pm):
     """dual/coalesce/perfbound_dual group per kind (3 groups for 6
     policies) and numeric variants reuse the warmed programs: a second

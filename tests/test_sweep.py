@@ -144,6 +144,45 @@ def test_sweep_matches_serial(swept, topo, pm, name):
                                    err_msg=f"{name}.{k}")
 
 
+def test_coalesce_parameter_curve_matches_serial(topo, pm):
+    """A whole coalescing-window curve — max_delay x max_frames lanes —
+    batches as ONE compiled replay of the coalesce static group, and every
+    lane matches its own serial replay (the single-point coverage above
+    never exercised these two knobs as vmapped curve axes)."""
+    tr = _mini_trace(topo, n=10, seed=13)
+    pols = {f"coal/{md:g}/{mf}": Policy(
+                kind="coalesce", t_pdt=1e-5, t_dst=2e-4,
+                max_delay=md, max_frames=mf,
+                sleep_state="fast_wake", deep_state="deep_sleep")
+            for md in (1e-5, 5e-5, 2e-4) for mf in (1, 4, 16)}
+    assert len(W.group_policies(pols)) == 1        # one batched program
+    got = W.sweep_policies(tr, topo, pols, pm)
+    for name, pol in pols.items():
+        want, _ = S.simulate_trace(tr, topo, pol, pm)
+        for k in CHECK_FIELDS:
+            np.testing.assert_allclose(
+                got[name].as_dict()[k], want.as_dict()[k],
+                rtol=1e-9, atol=1e-12, err_msg=f"{name}.{k}")
+    # the knobs are live on the batch axis: deferral must move the
+    # energy/latency numbers across the max_delay lanes once max_frames
+    # allows coalescing...
+    curve = {md: got[f"coal/{md:g}/16"].link_energy
+             for md in (1e-5, 5e-5, 2e-4)}
+    assert len(set(curve.values())) > 1, \
+        f"max_delay lanes collapsed to one result: {curve}"
+    # ...and a one-frame buffer (max_frames=1) disables deferral,
+    # degenerating to the plain dual ladder exactly (DESIGN.md §6)
+    dual, _ = S.simulate_trace(
+        tr, topo, Policy(kind="dual", t_pdt=1e-5, t_dst=2e-4,
+                         sleep_state="fast_wake", deep_state="deep_sleep"),
+        pm)
+    for md in (1e-5, 5e-5, 2e-4):
+        for k in CHECK_FIELDS:
+            np.testing.assert_allclose(
+                got[f"coal/{md:g}/1"].as_dict()[k], dual.as_dict()[k],
+                rtol=1e-12, err_msg=f"coal/{md:g}/1 vs dual: {k}")
+
+
 def test_sweep_max_group_split_matches(topo, pm):
     """Splitting a group into sub-batches must not change results."""
     tr = _mini_trace(topo, n=8, seed=5)
