@@ -9,9 +9,10 @@ trajectory: ``rows`` carry cells/s, and warm passes exercise the trace /
 plan / program caches end to end.
 
 Scales:
-  * tiny  — the 4-scenario dc-* family (one stack) x 2 policies, 8-node
+  * tiny  — the 4-scenario dc-* family (one stack) x 5 policies (one per
+    FSM family, incl. the predictive precoalesce/predict kinds), 8-node
     allocations on the 12-node Megafly: the CI smoke grid.
-  * small — 8 scenarios across all four families x the default 4-policy
+  * small — 8 scenarios across all four families x the default 9-policy
     grid on the 80-node Megafly.
   * paper — the full catalog at 64-node allocations on the 4160-node
     Megafly.
@@ -33,6 +34,15 @@ def _grid(scale: str) -> dict:
             "dual-10us-200us": Policy(kind="dual", t_pdt=1e-5, t_dst=2e-4,
                                       sleep_state="fast_wake",
                                       deep_state="deep_sleep"),
+            "precoalesce-50us": Policy(kind="precoalesce", t_pdt=1e-5,
+                                       t_dst=2e-4, hold_delay=5e-5,
+                                       hold_frames=16,
+                                       sleep_state="fast_wake",
+                                       deep_state="deep_sleep"),
+            "predict-ewma": Policy(kind="predict", t_pdt=1e-5, t_dst=2e-4,
+                                   forecast_weight=0.5, forecast_margin=2.0,
+                                   sleep_state="fast_wake",
+                                   deep_state="deep_sleep"),
         }
     return SC.default_policy_grid()
 

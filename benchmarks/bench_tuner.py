@@ -9,8 +9,10 @@ round's (T, B) program shapes repeat); ``check_compiles.py`` guards that
 against ``baselines/compile_counts.json`` in the bench-smoke CI job.
 
 Scales:
-  * tiny  — the 4-scenario dc-* stack x the 10-candidate ``tiny_space``,
-    2 rounds, 8-node allocations on the 12-node Megafly (CI smoke).
+  * tiny  — the 4-scenario dc-* stack x the 12-candidate ``tiny_space``
+    (all eight searched kinds, incl. the predictive precoalesce/predict
+    FSMs), 2 rounds, 8-node allocations on the 12-node Megafly (CI
+    smoke).
   * small — the dc-* + hpc-* families x the full ``default_space``,
     3 rounds on the 80-node Megafly.
   * paper — the whole catalog at 64-node allocations on the 4160-node

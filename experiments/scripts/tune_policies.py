@@ -1,6 +1,6 @@
 """Scenario-driven policy auto-tuning: per-scenario frontier + winner tables.
 
-Searches the policy space (all 7 kinds x their parameter grids, coarse
+Searches the policy space (all 9 kinds x their parameter grids, coarse
 grid + successive-halving refinement — ``repro.tuning``) for every
 selected catalog scenario under a degradation budget, entirely on the
 batched compiled pipeline, and prints each scenario's energy/degradation

@@ -72,9 +72,10 @@ def evaluate_fixed(gaps, durs, tail, t_pdt, policy: Policy,
     tpdt = jnp.broadcast_to(jnp.asarray(t_pdt, jnp.float32), (P,))
     st, st2 = policy.state, policy.deep
     t_dst = policy.t_dst if policy.dual_capable else float("inf")
+    hold = policy.hold_delay if policy.kind == "precoalesce" else 0.0
     out = ops.port_energy_op(gaps, durs, tpdt, tail, t_w=st.t_w, t_s=st.t_s,
                              t_w2=st2.t_w, t_s2=st2.t_s, t_dst=t_dst,
-                             use_ref=use_ref)
+                             hold=hold, use_ref=use_ref)
     link_energy = 2 * pm.port_power * (
         out["time_wake"].sum() + st.power_frac * out["time_sleep"].sum()
         + st2.power_frac * out["time_sleep2"].sum())

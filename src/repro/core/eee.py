@@ -50,6 +50,19 @@ class Policy:
                          demotion threshold from the same histograms, so
                          deep sleep engages only where the predicted
                          residual idle amortizes its extra wake penalty.
+      * ``precoalesce``  — hold-at-source coalescing (arXiv 2005.13267):
+                         the dual ladder, but the deferral happens at the
+                         INJECTION link only — frames queue at the source
+                         for up to ``hold_delay`` (early release once
+                         ~``hold_frames`` queue), so every downstream port
+                         sees pre-formed bursts and sleeps undisturbed.
+      * ``predict``      — proactive forecaster (arXiv 1503.02843): an
+                         EWMA over the per-port inactivity histograms —
+                         with a dominant-mode (periodogram) override for
+                         periodic BSP traffic — predicts the NEXT gap and
+                         schedules t_PDT and the demotion timer ahead of
+                         it: a predicted-long gap sleeps/demotes at onset,
+                         a predicted-short gap holds the port awake.
     hist_mode: ``keep_all`` | ``self_clear`` | ``circular`` (§3.2/§4).
     """
     kind: str = "none"
@@ -63,6 +76,13 @@ class Policy:
     # -- frame coalescing (kind == "coalesce") -----------------------------
     max_delay: float = 0.0            # max wake deferral per sleep cycle (s)
     max_frames: int = 32              # queue bound: est. early-wake trigger
+    # -- hold-at-source pre-coalescing (kind == "precoalesce") -------------
+    hold_delay: float = 0.0           # max injection hold per sleep cycle (s)
+    hold_frames: int = 32             # source queue bound: early release
+    # -- arrival forecasting (kind == "predict") ---------------------------
+    forecast_weight: float = 0.5      # EWMA weight of the newest gap (0=off)
+    forecast_margin: float = 2.0      # safety factor on the break-even gaps
+    period_conf: float = 0.6          # mode-bin share that flips to periodic
     hist_mode: str = "keep_all"
     hist_bins: int = 200
     hist_bin_width: float = 10e-6     # seconds/bin (linear binning)
@@ -84,7 +104,8 @@ class Policy:
 
     def __post_init__(self):
         assert self.kind in ("none", "fixed", "perfbound", "perfbound_correct",
-                             "dual", "coalesce", "perfbound_dual")
+                             "dual", "coalesce", "perfbound_dual",
+                             "precoalesce", "predict")
         assert self.sleep_state in EEE_STATES
         assert self.deep_state in EEE_STATES
         assert self.hist_mode in ("keep_all", "self_clear", "circular")
@@ -100,6 +121,10 @@ class Policy:
                 "deep_state must not dominate sleep_state"
             assert self.t_dst >= 0.0
         assert self.max_delay >= 0.0 and self.max_frames >= 1
+        assert self.hold_delay >= 0.0 and self.hold_frames >= 1
+        assert 0.0 <= self.forecast_weight <= 1.0
+        assert self.forecast_margin > 0.0
+        assert 0.0 < self.period_conf <= 1.0
 
     @property
     def state(self) -> LinkState:
@@ -113,12 +138,13 @@ class Policy:
     @property
     def adaptive(self) -> bool:
         return self.kind in ("perfbound", "perfbound_correct",
-                             "perfbound_dual")
+                             "perfbound_dual", "predict")
 
     @property
     def dual_capable(self) -> bool:
         """Kinds whose FSM can reach the deep row (second sleep state)."""
-        return self.kind in ("dual", "coalesce", "perfbound_dual")
+        return self.kind in ("dual", "coalesce", "perfbound_dual",
+                             "precoalesce", "predict")
 
 
 # ---------------------------------------------------------------------------
@@ -147,7 +173,8 @@ PARAM_FIELDS = (
     "t_pdt", "tpdt_init", "max_tpdt", "bound", "sync_overhead",
     "t_w", "t_s", "power_frac",
     "t_w2", "t_s2", "power_frac2", "t_dst",
-    "max_delay", "max_frames",
+    "max_delay", "max_frames", "hold_delay", "hold_frames",
+    "forecast_weight", "forecast_margin", "period_conf",
     "hist_bin_width", "hist_log_min", "hist_log_max", "hist_clear_n",
     "hist_decay",
 )
@@ -212,6 +239,8 @@ def canonical_proto(policy: Policy) -> Policy:
     return dataclasses.replace(
         policy, sleep_state="deep_sleep", deep_state="deep_sleep",
         t_pdt=0.0, bound=0.01, t_dst=1e-3, max_delay=0.0, max_frames=32,
+        hold_delay=0.0, hold_frames=32,
+        forecast_weight=0.5, forecast_margin=2.0, period_conf=0.6,
         tpdt_init=10e-3, max_tpdt=10e-3, sync_overhead=5e-9,
         hist_bin_width=10e-6, hist_log_min=1e-7, hist_log_max=10.0,
         hist_clear_n=250,

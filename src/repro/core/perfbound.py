@@ -102,9 +102,11 @@ def init_state(n_links, policy, params=None):
         win_start=jnp.zeros((P,), jnp.float64),
         hops=jnp.zeros((P, MAXH), jnp.int64),
     )
-    if policy.kind == "perfbound_dual":
+    if policy.kind in ("perfbound_dual", "predict"):
         p = _params(policy, params)
         st["t_dst"] = jnp.full((P,), p["t_dst"], jnp.float64)
+    if policy.kind == "predict":
+        st["ewma"] = jnp.zeros((P,), jnp.float64)
     if policy.hist_mode == "circular":
         R = policy.ring_n
         st["ring_bin"] = jnp.full((P, R), -1, jnp.int32)
@@ -124,7 +126,9 @@ def _initial_tpdt(policy, params=None):
     p = _params(policy, params)
     if policy.kind == "none":
         return jnp.inf
-    if policy.kind in ("fixed", "dual", "coalesce"):
+    if policy.kind in ("fixed", "dual", "coalesce", "precoalesce", "predict"):
+        # predict starts dual-like: the forecaster takes over per port as
+        # soon as the first gap lands in its histogram
         return p["t_pdt"]
     return p["tpdt_init"]
 
@@ -274,7 +278,11 @@ def tpdt_select(counts, sums, N, total, policy, params=None, ccum=None):
     sj = jnp.take_along_axis(sums, j[..., None], -1)[..., 0]
     mean = jnp.where(cj > 0, sj / jnp.maximum(cj, 1e-30), centers[j])
     t = jnp.where(found, mean, p["max_tpdt"])
-    return jnp.where(total > 0, t, p["tpdt_init"])
+    # empty-histogram fallback: no samples yet (total == 0) OR no live mass
+    # (total > 0 but every count zeroed, e.g. an externally invalidated
+    # histogram) — bin 0 would otherwise look feasible with an empty-bin
+    # "mean" of its center, a bogusly aggressive timer
+    return jnp.where((total > 0) & (rcum[..., 0] > 0), t, p["tpdt_init"])
 
 
 def deep_breakeven(params) -> jnp.ndarray:
@@ -315,7 +323,10 @@ def tdst_select(counts, sums, tpdt, r_star, total, policy, params=None,
     j = jnp.argmax(feasible, axis=-1)
     T = centers[j]
     t = jnp.where(found, jnp.maximum(T - tpdt, 0.0), jnp.inf)
-    return jnp.where(total > 0, t, p["t_dst"])
+    # same empty-histogram fallback as tpdt_select: a massless histogram
+    # (total == 0, or invalidated counts) keeps the initial timer instead
+    # of pinning demotion off at +inf
+    return jnp.where((total > 0) & (ccum[..., 0] > 0), t, p["t_dst"])
 
 
 def compute_tdst(st, lp, tpdt_new, policy, params=None):
@@ -344,6 +355,72 @@ def compute_tpdt_tdst(st, lp, t_now, t_w, policy, params=None):
     r_star = jnp.broadcast_to(deep_breakeven(p), lp.shape)
     td = tdst_select(counts, sums, t, r_star, total, policy, p, ccum=ccum)
     return t, td
+
+
+def sleep_breakeven(params) -> jnp.ndarray:
+    """Gap length at which entering the (row-1) sleep state at onset pays:
+    the down transition at wake power plus the wake penalty must be repaid
+    by the idle power floor,
+
+        g* = t_s + (t_w + sync) / (1 - frac).
+    """
+    return params["t_s"] + (params["t_w"] + params["sync_overhead"]) \
+        / (1.0 - params["power_frac"])
+
+
+def forecast_update(st, lp, gap, active, policy, params=None):
+    """``predict`` forecaster (arXiv 1503.02843 flavor): predict the NEXT
+    inactivity gap per port and schedule the timers ahead of it.
+
+    Two estimators share the histogram state ``record_gaps`` already
+    maintains.  An EWMA of observed gaps (weight ``forecast_weight`` on the
+    newest) tracks drifting traffic; when one histogram bin holds at least
+    ``period_conf`` of the live mass — periodic BSP traffic concentrates
+    its inter-burst gap in one bin — the mode bin's mean overrides the
+    EWMA (the cheap periodogram: the dominant frequency of a periodic
+    arrival process IS its modal gap).
+
+    The predicted gap then prices the FSM ladder *proactively*: if it
+    covers ``forecast_margin`` x the sleep break-even the port sleeps at
+    onset (t_pdt -> 0), and if it also covers the demotion break-even the
+    port demotes at onset (t_dst -> 0).  When the forecast does NOT clear
+    a margin the timer falls back to the policy's own reactive value —
+    predict degrades gracefully to ``dual`` on unpredictable traffic
+    instead of holding awake, so a large ``forecast_margin`` (never
+    confident) and ``forecast_weight == 0`` (forecaster off) both
+    reproduce ``dual`` bit-for-bit.
+
+    Call AFTER ``record_gaps`` (the new gap is already in the histogram).
+    Returns (tpdt_new, t_dst_new, ewma_new), each (K,).
+    """
+    p = _params(policy, params)
+    obs = active & (gap > 0)
+    w = p["forecast_weight"]
+    total = st["total"][lp]
+    ewma_old = st["ewma"][lp]
+    first = obs & (total <= 1)
+    ewma_new = jnp.where(
+        first, gap,
+        jnp.where(obs, (1.0 - w) * ewma_old + w * gap, ewma_old))
+
+    counts = st["counts"][lp]
+    sums = st["sums"][lp]
+    mass = counts.sum(-1)
+    j = jnp.argmax(counts, axis=-1)
+    cj = jnp.take_along_axis(counts, j[..., None], -1)[..., 0]
+    sj = jnp.take_along_axis(sums, j[..., None], -1)[..., 0]
+    mode_mean = jnp.where(cj > 0, sj / jnp.maximum(cj, 1e-30), 0.0)
+    peaked = (mass > 0) & (cj >= p["period_conf"] * mass)
+    ghat = jnp.where(peaked, mode_mean, ewma_new)
+
+    pred_on = (w > 0) & (total > 0)
+    b1 = sleep_breakeven(p)
+    r_star = deep_breakeven(p)
+    sleep_now = ghat >= p["forecast_margin"] * b1
+    deep_now = ghat >= p["forecast_margin"] * (b1 + r_star)
+    tpdt_new = jnp.where(pred_on & sleep_now, 0.0, p["t_pdt"])
+    tdst_new = jnp.where(pred_on & deep_now, 0.0, p["t_dst"])
+    return tpdt_new, tdst_new, ewma_new
 
 
 def pbc_cf(reg, ratio_log, n_seen, policy):

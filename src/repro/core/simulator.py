@@ -79,6 +79,13 @@ def init_net(n_links, policy: Policy, params=None):
         net["coal_n"] = jnp.zeros((P,), jnp.float64)
         net["coal_prev"] = jnp.zeros((P,), jnp.float64)
         net["coal_release"] = jnp.zeros((P,), jnp.float64)
+    if policy.kind == "precoalesce":
+        # hold-at-source cycle carry: same structure as coalescing, but the
+        # cycle lives on the INJECTION link only — downstream ports see the
+        # already-batched bursts and keep plain dual-ladder FSMs
+        net["pre_n"] = jnp.zeros((P,), jnp.float64)
+        net["pre_prev"] = jnp.zeros((P,), jnp.float64)
+        net["pre_release"] = jnp.zeros((P,), jnp.float64)
     return net
 
 
@@ -101,6 +108,8 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     t_w2 = p["t_w2"] + p["sync_overhead"]
     t_s2 = p["t_s2"]
     coal = policy.kind == "coalesce"
+    pre = policy.kind == "precoalesce"
+    defer_on = coal or pre
 
     active = (jnp.arange(H) < nhops) & valid & (links >= 0)
     lp = jnp.where(active, links, n_links)                 # dummy row when off
@@ -112,27 +121,39 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     dl = net["deadline"][lp]
     dl2 = net["deadline2"][lp]
     tpdt_prev = net["pred"]["tpdt"][lp]
-    if coal:
+    if defer_on:
         # wake deferral for the frame that would wake a sleeping port:
         # full max_delay, scaled down when the previous cycle's burst
         # overran the queue bound (rate estimate of the max_frames
         # trigger).  At a miss the just-ended cycle's count still sits in
         # coal_n (it rolls into coal_prev below), so the freshest burst
         # estimate is coal_n when non-zero, else the rolled coal_prev.
-        coal_n_g = net["coal_n"][lp]
-        coal_prev_g = net["coal_prev"][lp]
-        coal_release_g = net["coal_release"][lp]
+        # precoalesce runs the SAME cycle machinery with its own knobs
+        # (hold_delay/hold_frames) on separate carries, restricted below
+        # to the injection hop.
+        ck = ("coal_n", "coal_prev", "coal_release") if coal \
+            else ("pre_n", "pre_prev", "pre_release")
+        d_delay = p["max_delay"] if coal else p["hold_delay"]
+        d_frames = p["max_frames"] if coal else p["hold_frames"]
+        coal_n_g = net[ck[0]][lp]
+        coal_prev_g = net[ck[1]][lp]
+        coal_release_g = net[ck[2]][lp]
         prev_burst = jnp.where(coal_n_g > 0, coal_n_g, coal_prev_g)
-        defer_amt = jnp.where(
-            p["max_frames"] > 1.0,
-            p["max_delay"] * p["max_frames"]
-            / jnp.maximum(prev_burst, p["max_frames"]), 0.0)
+        defer_full = jnp.where(
+            d_frames > 1.0,
+            d_delay * d_frames
+            / jnp.maximum(prev_burst, d_frames), 0.0)
+        # hold-at-source: frames queue at the injection link (hop 0) only;
+        # downstream hops never defer
+        at_src = (jnp.arange(H) == 0) if pre \
+            else jnp.ones((H,), bool)
+        defer_amt = jnp.where(at_src, defer_full, 0.0)
 
     def _fsm(ta, dl_h, dl2_h, defer_h):
         """One port's FSM read at raw arrival ``ta``: (asleep, deep,
         in_down, in_down2, effective arrival, wake penalty)."""
         asleep = ta >= dl_h
-        tae = ta + jnp.where(asleep, defer_h, 0.0) if coal else ta
+        tae = ta + jnp.where(asleep, defer_h, 0.0) if defer_on else ta
         deep = tae >= dl2_h
         in_down = asleep & (tae < dl_h + t_s)
         in_down2 = deep & (tae < dl2_h + t_s2)
@@ -145,7 +166,7 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     t_head = t_inj
     t_avail = jnp.zeros((H,), jnp.float64)
     t_start = jnp.zeros((H,), jnp.float64)
-    if coal:
+    if defer_on:
         # pre-occupancy arrival per hop: the moment the frame reaches the
         # port's queue, BEFORE waiting for the link to free — the time the
         # coalescing-cycle join test must use (a frame queued behind the
@@ -155,19 +176,19 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     for h in range(H):
         ta = jnp.maximum(t_head, free[h])
         _, _, _, _, tae, pen = _fsm(ta, dl[h], dl2[h],
-                                    defer_amt[h] if coal else 0.0)
+                                    defer_amt[h] if defer_on else 0.0)
         ts_ = tae + pen
         te_ = ts_ + t_ser
         t_avail = t_avail.at[h].set(ta)
         t_start = t_start.at[h].set(ts_)
-        if coal:
+        if defer_on:
             t_arr = t_arr.at[h].set(t_head)
         t_head = jnp.where(active[h], ts_ + pm.switch_latency, t_head)
         delivery = jnp.where(active[h], te_, delivery)
 
     t_end = t_start + t_ser
     asleep, deep, in_down, in_down2, tae, _ = _fsm(
-        t_avail, dl, dl2, defer_amt if coal else 0.0)
+        t_avail, dl, dl2, defer_amt if defer_on else 0.0)
     gap = t_avail - last
     new_last = jnp.maximum(last, t_end)
 
@@ -205,17 +226,20 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     )
 
     # ---- coalescing-cycle bookkeeping -------------------------------------
-    if coal:
-        miss = asleep & active
-        join = active & ~asleep & (coal_n_g > 0) \
+    if defer_on:
+        # precoalesce: the cycle state advances only at the injection hop
+        # (the at_src mask); downstream rows write their gathered values
+        # back unchanged
+        miss = asleep & active & at_src
+        join = active & at_src & ~asleep & (coal_n_g > 0) \
             & (t_arr <= coal_release_g)
         roll = jnp.where(coal_n_g > 0, coal_n_g, coal_prev_g)
-        net["coal_prev"] = net["coal_prev"].at[lp].set(
+        net[ck[1]] = net[ck[1]].at[lp].set(
             jnp.where(miss, roll, coal_prev_g))
-        net["coal_n"] = net["coal_n"].at[lp].set(
+        net[ck[0]] = net[ck[0]].at[lp].set(
             jnp.where(miss, 1.0,
                       jnp.where(join, coal_n_g + 1.0, coal_n_g)))
-        net["coal_release"] = net["coal_release"].at[lp].set(
+        net[ck[2]] = net[ck[2]].at[lp].set(
             jnp.where(miss, t_start, coal_release_g))
 
     # ---- occupancy / transmission-end bookkeeping -------------------------
@@ -237,6 +261,15 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
                 pred, lp, t_end, p["t_w"], policy, p)
             pred = dict(pred, t_dst=pred["t_dst"].at[lp].set(
                 jnp.where(active, new_tdst, pred["t_dst"][lp])))
+        elif policy.kind == "predict":
+            new_tpdt, new_tdst, new_ewma = pb.forecast_update(
+                pred, lp, gap, active, policy, p)
+            pred = dict(
+                pred,
+                t_dst=pred["t_dst"].at[lp].set(
+                    jnp.where(active, new_tdst, pred["t_dst"][lp])),
+                ewma=pred["ewma"].at[lp].set(
+                    jnp.where(active, new_ewma, pred["ewma"][lp])))
         else:
             new_tpdt = pb.compute_tpdt(pred, lp, t_end, p["t_w"], policy, p)
         pred = dict(pred, tpdt=pred["tpdt"].at[lp].set(
@@ -249,7 +282,7 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     new_dl = jnp.where(active, new_last + tpdt_now, dl)
     net["deadline"] = net["deadline"].at[lp].add(new_dl - dl)
     tdst_now = net["pred"]["t_dst"][lp] \
-        if policy.kind == "perfbound_dual" else p["t_dst"]
+        if policy.kind in ("perfbound_dual", "predict") else p["t_dst"]
     new_dl2 = jnp.where(active, new_dl + jnp.maximum(tdst_now, t_s), dl2)
     # masked SET, not scatter-add: adaptive t_dst legitimately swings
     # between +inf ("never demote") and finite, and inf - inf through an

@@ -47,18 +47,23 @@ def hist_update_op(gaps, *, n_bins, bin_width, log_bins=False, log_min=1e-7,
 
 
 @partial(jax.jit, static_argnames=("t_w", "t_s", "t_w2", "t_s2", "use_ref"))
-def port_energy_op(gaps, durs, tpdt, tail, t_dst=None, *, t_w, t_s,
+def port_energy_op(gaps, durs, tpdt, tail, t_dst=None, hold=None, *, t_w, t_s,
                    t_w2=0.0, t_s2=0.0, use_ref=False):
     """Per-port energy replay; the dual-mode row (t_w2/t_s2) engages for
     gaps past ``tpdt + max(t_dst, t_s)``.  The state-table rows are static
     (a 2-entry table), but ``t_dst`` — a continuously swept knob — is a
     TRACED scalar/(P,) operand, so a demotion-timer curve reuses one
-    compiled kernel (None -> +inf -> single-state)."""
+    compiled kernel (None -> +inf -> single-state).  ``hold`` is the
+    predictive hold-at-source row (precoalesce), equally traced
+    (None -> 0 -> off): a hold_delay curve also reuses one kernel."""
     f32 = lambda x: x.astype(jnp.float32)
     if t_dst is None:
         t_dst = jnp.inf
+    if hold is None:
+        hold = 0.0
     t_dst = jnp.asarray(t_dst, jnp.float32)
-    kw = dict(t_w=t_w, t_s=t_s, t_w2=t_w2, t_s2=t_s2, t_dst=t_dst)
+    hold = jnp.asarray(hold, jnp.float32)
+    kw = dict(t_w=t_w, t_s=t_s, t_w2=t_w2, t_s2=t_s2, t_dst=t_dst, hold=hold)
     if use_ref:
         return ref.port_energy_ref(f32(gaps), f32(durs), f32(tpdt), f32(tail),
                                    **kw)

@@ -30,13 +30,16 @@ TILE_P = 128
 MAX_E = 8192
 
 
-def _kernel(gaps_ref, durs_ref, tpdt_ref, tds_ref, tail_ref,
+def _kernel(gaps_ref, durs_ref, tpdt_ref, tds_ref, hold_ref, tail_ref,
             wake_ref, sleep_ref, sleep2_ref, nwake_ref, hits_ref, miss_ref,
             ndeep_ref, *, t_w, t_s, t_w2, t_s2, n_events):
     tpdt = tpdt_ref[...]
     # per-port demotion timer, pre-clamped to >= t_s by the caller
     # (demotion cannot precede the first down transition)
     tds = tds_ref[...]
+    # predictive row: hold-at-source deferral granted to frames that find
+    # the port asleep — the effective gap stretches by ``hold`` (0 = off)
+    hold = hold_ref[...]
 
     def body(e, carry):
         wake, sleep, sleep2, nw, hit, miss, nd = carry
@@ -44,17 +47,18 @@ def _kernel(gaps_ref, durs_ref, tpdt_ref, tds_ref, tail_ref,
         d = durs_ref[e, :]
         act = d > 0
         asleep = act & (g >= tpdt)
-        deep = act & (g >= tpdt + tds)
+        ge = g + jnp.where(asleep, hold, 0.0)
+        deep = act & (ge >= tpdt + tds)
         wake_fast = tpdt + t_s + t_w + d
         wake_deep = tpdt + t_s + t_s2 + t_w2 + d
         wake_add = jnp.where(asleep,
                              jnp.where(deep, wake_deep, wake_fast), g + d)
         sleep_add = jnp.where(asleep,
                               jnp.where(deep, tds - t_s,
-                                        jnp.maximum(g - tpdt - t_s, 0.0)),
+                                        jnp.maximum(ge - tpdt - t_s, 0.0)),
                               0.0)
         sleep2_add = jnp.where(
-            deep, jnp.maximum(g - tpdt - tds - t_s2, 0.0), 0.0)
+            deep, jnp.maximum(ge - tpdt - tds - t_s2, 0.0), 0.0)
         af = asleep.astype(jnp.float32)
         return (wake + jnp.where(act, wake_add, 0.0),
                 sleep + jnp.where(act, sleep_add, 0.0),
@@ -81,18 +85,23 @@ def _kernel(gaps_ref, durs_ref, tpdt_ref, tds_ref, tail_ref,
 
 
 def port_energy_pallas(gaps, durs, tpdt, tail, *, t_w, t_s,
-                       t_w2=0.0, t_s2=0.0, t_dst=None,
+                       t_w2=0.0, t_s2=0.0, t_dst=None, hold=None,
                        interpret=False):
     """gaps/durs: (E, P) f32; tpdt/tail: (P,) f32; t_dst: scalar or (P,)
     demotion timer (traced — a timer sweep reuses ONE compiled kernel;
-    None/inf = single-state).  Returns dict of (P,)."""
+    None/inf = single-state).  ``hold``: scalar or (P,) hold-at-source
+    deferral (the precoalesce row; traced, None/0 = off).
+    Returns dict of (P,)."""
     E, P = gaps.shape
     assert E <= MAX_E, f"E={E} exceeds kernel cap; chunk at ops level"
     Pp = pl.cdiv(P, TILE_P) * TILE_P
     if t_dst is None:
         t_dst = jnp.inf
+    if hold is None:
+        hold = 0.0
     tds = jnp.broadcast_to(
         jnp.maximum(jnp.asarray(t_dst, jnp.float32), jnp.float32(t_s)), (P,))
+    hld = jnp.broadcast_to(jnp.asarray(hold, jnp.float32), (P,))
 
     def padE(x):
         return jnp.zeros((E, Pp), jnp.float32).at[:, :P].set(
@@ -110,12 +119,13 @@ def port_energy_pallas(gaps, durs, tpdt, tail, *, t_w, t_s,
                   pl.BlockSpec((E, TILE_P), lambda i: (0, i)),
                   pl.BlockSpec((TILE_P,), lambda i: (i,)),
                   pl.BlockSpec((TILE_P,), lambda i: (i,)),
+                  pl.BlockSpec((TILE_P,), lambda i: (i,)),
                   pl.BlockSpec((TILE_P,), lambda i: (i,))],
         out_specs=[pl.BlockSpec((TILE_P,), lambda i: (i,))] * 7,
         out_shape=[jax.ShapeDtypeStruct((Pp,), jnp.float32)] * 7,
         interpret=interpret,
     )(padE(gaps), padE(durs), padP(tpdt, fill=1e30),
-      padP(tds, fill=float("inf")), padP(tail))
+      padP(tds, fill=float("inf")), padP(hld), padP(tail))
     keys = ["time_wake", "time_sleep", "time_sleep2", "n_wake", "hits",
             "misses", "n_deep"]
     return {k: v[:P] for k, v in zip(keys, outs)}

@@ -45,11 +45,13 @@ def hist_update_ref(gaps, *, n_bins, bin_width, log_bins=False,
 
 
 def port_energy_ref(gaps, durs, tpdt, tail, *, t_w, t_s,
-                    t_w2=0.0, t_s2=0.0, t_dst=None):
+                    t_w2=0.0, t_s2=0.0, t_dst=None, hold=None):
     """Decoupled per-port EEE/PDT replay (fixed per-port t_PDT) with the
     dual-mode sleep ladder: gaps past ``tpdt + max(t_dst, t_s)`` demote to
     the deep row (t_w2/t_s2); ``t_dst`` is a traced scalar or (P,) timer —
-    None/inf is the single-state lowering.
+    None/inf is the single-state lowering.  ``hold`` is the predictive
+    hold-at-source row: a frame that finds its port asleep defers by up to
+    ``hold`` seconds, stretching the effective gap (None/0 = off).
 
     gaps/durs: (E,P) f32 — idle gap before each busy interval and its
     duration (duration 0 = padding).  tpdt/tail: (P,).
@@ -59,22 +61,26 @@ def port_energy_ref(gaps, durs, tpdt, tail, *, t_w, t_s,
     E, P = gaps.shape
     if t_dst is None:
         t_dst = jnp.inf
+    if hold is None:
+        hold = 0.0
     tds = jnp.maximum(jnp.asarray(t_dst, jnp.float32), jnp.float32(t_s))
+    hld = jnp.asarray(hold, jnp.float32)
 
     def step(carry, ed):
         wake, sleep, sleep2, nw, hit, miss, nd = carry
         g, d = ed
         act = d > 0
         asleep = act & (g >= tpdt)
-        deep = act & (g >= tpdt + tds)
+        ge = g + jnp.where(asleep, hld, 0.0)
+        deep = act & (ge >= tpdt + tds)
         wake_add = jnp.where(
             asleep, jnp.where(deep, tpdt + t_s + t_s2 + t_w2 + d,
                               tpdt + t_s + t_w + d), g + d)
         sleep_add = jnp.where(
             asleep, jnp.where(deep, tds - t_s,
-                              jnp.maximum(g - tpdt - t_s, 0.0)), 0.0)
+                              jnp.maximum(ge - tpdt - t_s, 0.0)), 0.0)
         sleep2_add = jnp.where(
-            deep, jnp.maximum(g - tpdt - tds - t_s2, 0.0), 0.0)
+            deep, jnp.maximum(ge - tpdt - tds - t_s2, 0.0), 0.0)
         return (wake + jnp.where(act, wake_add, 0.0),
                 sleep + jnp.where(act, sleep_add, 0.0),
                 sleep2 + sleep2_add,

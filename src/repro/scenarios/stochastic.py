@@ -36,6 +36,18 @@ def _flow_sizes(r, n, mean_bytes):
     return np.clip(raw, 64, 4 << 20).astype(np.int64)
 
 
+def _check(n_nodes, windows):
+    """Degenerate-parameter guard shared by every builder: src != dst
+    pairing needs two endpoints, and zero windows would synthesize an
+    empty trace whose Step arrays break the dc-* plan-shape guarantee."""
+    if n_nodes < 2:
+        raise ValueError(f"stochastic scenarios need n_nodes >= 2 "
+                         f"(got {n_nodes})")
+    if windows < 1:
+        raise ValueError(f"stochastic scenarios need windows >= 1 "
+                         f"(got {windows})")
+
+
 def _pairs(r, nodes, m, dst_weights=None):
     """m (src, dst) pairs with src != dst; optional non-uniform dst bias."""
     n = len(nodes)
@@ -67,12 +79,15 @@ def poisson(topo, n_nodes, seed, windows=24, window_secs=5e-3, rate=2000.0,
             mapping="linear"):
     """Memoryless arrivals: per window, Poisson(rate x window) flows between
     uniform (or, with ``hot_frac``, skewed) endpoint pairs."""
+    _check(n_nodes, windows)
     nodes = allocate(topo, n_nodes, mapping, seed)
     t = Trace(nodes=nodes, name="poisson")
     r = rng(seed)
     w = None
     if hot_frac > 0:                  # a few hot destinations take hot_frac
-        n_hot = max(n_nodes // 8, 1)
+        # clamp below n_nodes: every node hot would zero-divide the cold
+        # weights (and make the "hot subset" meaningless)
+        n_hot = max(min(n_nodes // 8, n_nodes - 1), 1)
         w = np.full(n_nodes, (1 - hot_frac) / (n_nodes - n_hot))
         w[r.choice(n_nodes, n_hot, replace=False)] = hot_frac / n_hot
     for i in range(windows):
@@ -89,6 +104,7 @@ def onoff(topo, n_nodes, seed, windows=24, window_secs=5e-3, rate_on=6000.0,
     """Bursty two-state (Markov-modulated) arrivals: windows flip between
     an ON state near saturation and a near-idle OFF state — the wake-storm
     regime where frame-coalescing/EEE trade-offs invert."""
+    _check(n_nodes, windows)
     nodes = allocate(topo, n_nodes, mapping, seed)
     t = Trace(nodes=nodes, name="onoff")
     r = rng(seed)
@@ -109,14 +125,19 @@ def incast(topo, n_nodes, seed, windows=24, window_secs=5e-3, fan_in=8,
     """Partition-aggregate incast: each window, one random aggregator pulls
     ``fan_in`` synchronized responses (serializing at its access link) over
     a trickle of background flows."""
+    _check(n_nodes, windows)
     nodes = allocate(topo, n_nodes, mapping, seed)
     t = Trace(nodes=nodes, name="incast")
     r = rng(seed)
     fan_in = min(fan_in, max_flows)   # keep the one-bucket shape guarantee
+    # at least one response per window: fan_in <= 0 with a quiet background
+    # (m_bg == 0) would otherwise emit an EMPTY message step, changing the
+    # step/shape structure the dc-* stacking guarantee depends on
+    fan_in = max(min(fan_in, n_nodes - 1), 1)
     for i in range(windows):
         _window_compute(t, r, n_nodes, window_secs, jitter)
         agg = int(r.integers(0, n_nodes))
-        srcs = (agg + 1 + r.choice(n_nodes - 1, min(fan_in, n_nodes - 1),
+        srcs = (agg + 1 + r.choice(n_nodes - 1, fan_in,
                                    replace=False)) % n_nodes
         msgs = [[int(nodes[s]), int(nodes[agg]), int(flow_bytes)]
                 for s in srcs]

@@ -26,8 +26,9 @@ _BASELINE_POLICY = Policy(kind="none")
 
 def default_policy_grid() -> Dict[str, Policy]:
     """A compact representative grid: both sleep states on fixed PDT, both
-    single-state adaptive predictors, and the three dual-mode FSM kinds
-    (DESIGN.md §6) — 7 policies in 6 static groups."""
+    single-state adaptive predictors, the three reactive dual-mode FSM
+    kinds (DESIGN.md §6), and the two predictive kinds (DESIGN.md §8) —
+    9 policies in 8 static groups."""
     return {
         "fixed-fw-10us": Policy(kind="fixed", t_pdt=1e-5,
                                 sleep_state="fast_wake"),
@@ -47,6 +48,14 @@ def default_policy_grid() -> Dict[str, Policy]:
         "pbd-1pct": Policy(kind="perfbound_dual", bound=0.01,
                            sleep_state="fast_wake",
                            deep_state="deep_sleep"),
+        "precoalesce-50us": Policy(kind="precoalesce", t_pdt=1e-5,
+                                   t_dst=2e-4, hold_delay=5e-5,
+                                   hold_frames=16, sleep_state="fast_wake",
+                                   deep_state="deep_sleep"),
+        "predict-ewma": Policy(kind="predict", t_pdt=1e-5, t_dst=2e-4,
+                               forecast_weight=0.5, forecast_margin=2.0,
+                               sleep_state="fast_wake",
+                               deep_state="deep_sleep"),
     }
 
 

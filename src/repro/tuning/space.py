@@ -121,12 +121,15 @@ _TPDTS = (1e-6, 1e-5, 1e-4, 1e-3)
 
 
 def default_space() -> List[KindSpace]:
-    """The full search space (35 candidates in 6 static groups).
+    """The full search space (52 candidates in 8 static groups).
 
     Coarse grids deliberately contain the PR-4 suite's fixed grid points
     (``fixed-fw-10us``, ``dual-10us-200us``, …) so the tuned winner can
     never fall behind the best fixed-grid policy on any scenario — the
-    incumbent is always in round 0.  The seventh kind, ``none``, is not a
+    incumbent is always in round 0.  The predictive kinds (``pre``,
+    ``predict``) join as their own static groups with the same guarantee:
+    their knob grids include the degenerate points that collapse onto the
+    reactive dual ladder.  The remaining kind, ``none``, is not a
     KindSpace: its parameterless single point IS the always-on baseline
     lane the tuner already rides in every pool (``frontier.BASELINE_NAME``,
     the guaranteed-feasible fallback) — listing it here would duplicate
@@ -154,11 +157,24 @@ def default_space() -> List[KindSpace]:
                         integer=True))),
         KindSpace("pbd", Policy(kind="perfbound_dual", **_LADDER),
                   (Knob("bound", _BOUNDS, step=4.0, lo=1e-4, hi=0.5),)),
+        KindSpace("pre", Policy(kind="precoalesce", t_pdt=1e-5, **_LADDER),
+                  (Knob("t_dst", (2e-4,), step=4.0, lo=0.0, hi=1.0),
+                   Knob("hold_delay", (1e-5, 5e-5, 2e-4), step=4.0,
+                        lo=0.0, hi=1e-2),
+                   Knob("hold_frames", (8, 16, 32), step=4.0, lo=1, hi=4096,
+                        integer=True))),
+        KindSpace("predict", Policy(kind="predict", **_LADDER),
+                  (Knob("t_pdt", (1e-5,), lo=0.0, hi=1.0),
+                   Knob("t_dst", (5e-5, 2e-4), step=4.0, lo=0.0, hi=1.0),
+                   Knob("forecast_weight", (0.5, 1.0), step=4.0,
+                        lo=0.0, hi=1.0),
+                   Knob("forecast_margin", (4.0, 16.0), step=4.0,
+                        lo=0.125, hi=1024.0))),
     ]
 
 
 def tiny_space() -> List[KindSpace]:
-    """A compact space (10 candidates) for CI smoke and tests — same
+    """A compact space (12 candidates) for CI smoke and tests — same
     structure as ``default_space`` (every searched kind, every static
     group; ``none`` again rides as the implicit baseline), minimal
     lanes."""
@@ -180,6 +196,13 @@ def tiny_space() -> List[KindSpace]:
                   (Knob("max_delay", (5e-5,), step=4.0, lo=0.0, hi=1e-2),)),
         KindSpace("pbd", Policy(kind="perfbound_dual", **_LADDER),
                   (Knob("bound", (0.01, 0.05), step=4.0, lo=1e-4, hi=0.5),)),
+        KindSpace("pre", Policy(kind="precoalesce", t_pdt=1e-5, t_dst=2e-4,
+                                hold_frames=16, **_LADDER),
+                  (Knob("hold_delay", (5e-5,), step=4.0, lo=0.0, hi=1e-2),)),
+        KindSpace("predict", Policy(kind="predict", t_pdt=1e-5, t_dst=2e-4,
+                                    forecast_margin=2.0, **_LADDER),
+                  (Knob("forecast_weight", (0.5,), step=4.0,
+                        lo=0.0, hi=1.0),)),
     ]
 
 

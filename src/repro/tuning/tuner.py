@@ -6,9 +6,10 @@ power-down must be *tuned to the workload* so energy saving comes with
 "minimal or no performance penalty".  This module closes that loop over
 the scenario catalog: given workloads and a degradation budget (percent
 execution-time overhead vs each workload's own always-on baseline),
-``tune_scenarios`` searches the whole policy space — all 7 kinds: six
-searched numeric parameter grids (``repro.tuning.space``) plus the
-seventh kind, ``none``, riding as the implicit always-on baseline lane of
+``tune_scenarios`` searches the whole policy space — all 9 kinds: eight
+searched numeric parameter grids (``repro.tuning.space``, including the
+predictive ``precoalesce``/``predict`` FSMs of DESIGN.md §8) plus the
+ninth kind, ``none``, riding as the implicit always-on baseline lane of
 every pool — and returns, per scenario, (a) the energy/degradation
 Pareto frontier and (b) the minimum-energy policy that respects the
 budget.

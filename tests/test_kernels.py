@@ -240,6 +240,64 @@ def test_port_energy_extremes():
     assert (np.asarray(always["time_wake"]) < span).all()
 
 
+@pytest.mark.parametrize("E,P", [(1, 1), (16, 64), (100, 130)])
+def test_port_energy_hold_matches_ref(E, P, rng):
+    """The precoalesce hold-at-source row: Pallas vs ref oracle with a
+    live (P,) hold operand and a dual-mode ladder engaged."""
+    gaps = rng.uniform(0, 2e-3, (E, P)).astype(np.float32)
+    durs = rng.uniform(0, 1e-4, (E, P)).astype(np.float32)
+    durs[rng.random((E, P)) < 0.2] = 0.0
+    tpdt = rng.uniform(0, 1e-3, (P,)).astype(np.float32)
+    tail = rng.uniform(0, 1.0, (P,)).astype(np.float32)
+    hold = rng.uniform(0, 5e-4, (P,)).astype(np.float32)
+    kw = dict(t_w=4.48e-6, t_s=2e-6, t_w2=1e-4, t_s2=1e-5)
+    got = ops.port_energy_op(gaps, durs, tpdt, tail, t_dst=2e-4, hold=hold,
+                             **kw)
+    want = ops.port_energy_op(gaps, durs, tpdt, tail, t_dst=2e-4, hold=hold,
+                              use_ref=True, **kw)
+    for k in got:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-8, err_msg=k)
+
+
+def test_port_energy_hold_zero_is_identity(rng):
+    """hold=0 and hold=None lower to the SAME program and numbers: the
+    traced hold operand costs nothing when the policy kind is not
+    precoalesce."""
+    gaps = rng.uniform(0, 2e-3, (32, 64)).astype(np.float32)
+    durs = rng.uniform(1e-6, 1e-4, (32, 64)).astype(np.float32)
+    tpdt = rng.uniform(0, 1e-3, (64,)).astype(np.float32)
+    tail = rng.uniform(0, 1.0, (64,)).astype(np.float32)
+    kw = dict(t_w=4.48e-6, t_s=2e-6, t_w2=1e-4, t_s2=1e-5, t_dst=2e-4)
+    off = ops.port_energy_op(gaps, durs, tpdt, tail, **kw)
+    zero = ops.port_energy_op(gaps, durs, tpdt, tail, hold=0.0, **kw)
+    for k in off:
+        np.testing.assert_array_equal(np.asarray(off[k]),
+                                      np.asarray(zero[k]), err_msg=k)
+
+
+def test_port_energy_hold_stretches_gap_into_deep():
+    """A hold grant only applies to frames that found the port asleep, and
+    stretches the effective gap across the demotion threshold: with
+    hold >= t_dst an asleep-found gap demotes to the deep row."""
+    t_dst = 1e-4
+    gaps = np.array([[5e-5, 1.5e-4]], np.float32)   # awake-hit, asleep-miss
+    durs = np.full((1, 2), 1e-5, np.float32)
+    tpdt = np.full((2,), 1e-4, np.float32)
+    tail = np.zeros((2,), np.float32)
+    kw = dict(t_w=4.48e-6, t_s=2e-6, t_w2=1e-4, t_s2=1e-5, t_dst=t_dst)
+    off = ops.port_energy_op(gaps, durs, tpdt, tail, hold=0.0, **kw)
+    on = ops.port_energy_op(gaps, durs, tpdt, tail, hold=t_dst, **kw)
+    # port 0 never slept: the hold row must not touch it
+    assert np.asarray(off["n_deep"])[0] == np.asarray(on["n_deep"])[0] == 0
+    np.testing.assert_array_equal(np.asarray(off["time_wake"])[0],
+                                  np.asarray(on["time_wake"])[0])
+    # port 1 slept; the stretched gap crosses tpdt + t_dst and demotes
+    assert np.asarray(off["n_deep"])[1] == 0
+    assert np.asarray(on["n_deep"])[1] == 1
+    assert np.asarray(on["time_sleep2"])[1] > 0
+
+
 # ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------

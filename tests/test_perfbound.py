@@ -265,6 +265,59 @@ def test_tdst_select_demotes_past_the_short_mode():
     np.testing.assert_allclose(float(t0), pol.t_dst, rtol=1e-12)
 
 
+def test_select_massless_histogram_falls_back():
+    """Satellite audit: histograms whose COUNTS are all zero — total == 0
+    (no history yet) or total > 0 with zeroed mass (decay underflow /
+    fault-invalidated rows) — must fall back to the policy's initial
+    timers.  Without the mass guard the all-feasible suffix picks bin 0
+    and returns its (empty-bin) center instead."""
+    pol = _pbd()
+    z = jnp.zeros((10,))
+    for total in (0.0, 3.0):
+        t = pb.tpdt_select(z, z, jnp.asarray(5.0), jnp.asarray(total), pol)
+        np.testing.assert_allclose(float(t), pol.tpdt_init, rtol=1e-12)
+        td = pb.tdst_select(z, z, jnp.asarray(5e-4), jnp.asarray(2e-3),
+                            jnp.asarray(total), pol)
+        np.testing.assert_allclose(float(td), pol.t_dst, rtol=1e-12)
+
+
+def test_bin_index_boundaries_linear():
+    """Satellite audit: exact bin edges, zero gaps, and beyond-range gaps
+    all map to a VALID bin (no -1 / out-of-range scatter drop)."""
+    pol = Policy(kind="perfbound", hist_bins=10, hist_bin_width=1e-3)
+    gaps = jnp.asarray([0.0, 1e-3, 2e-3 - 1e-9, 5e-3, 9e-3, 1.0])
+    idx = np.asarray(pb.bin_index(gaps, pol))
+    assert idx.tolist() == [0, 1, 1, 5, 9, 9]
+
+
+def test_bin_index_boundaries_log():
+    """Log binning: below-first-edge clamps to bin 0 (not negative), the
+    top edge and beyond clamp to the last bin, and every interior edge
+    lands in range."""
+    pol = Policy(kind="perfbound", hist_bins=8, hist_log_bins=True,
+                 hist_log_min=1e-6, hist_log_max=1.0)
+    idx = np.asarray(pb.bin_index(jnp.asarray([1e-9, 1e-6, 1.0, 10.0]),
+                                  pol))
+    assert idx[0] == 0 and idx[1] == 0
+    assert idx[2] == 7 and idx[3] == 7
+    edges = np.exp(np.linspace(np.log(1e-6), np.log(1.0), 9))
+    interior = np.asarray(pb.bin_index(jnp.asarray(edges[1:-1]), pol))
+    assert ((interior >= 0) & (interior < 8)).all()
+
+
+def test_bin_index_edge_values_conserve_mass():
+    """Every inserted edge-value gap lands in SOME bin: histogram mass
+    equals the insert count (nothing scatter-dropped)."""
+    pol = Policy(kind="perfbound", hist_mode="keep_all", hist_bins=10,
+                 hist_bin_width=1e-3)
+    gaps = [1e-12, 1e-3, 2e-3, 9.9999e-3, 5.0]
+    st_ = _insert(pol, gaps)
+    np.testing.assert_allclose(float(st_["counts"][0].sum()), len(gaps),
+                               rtol=1e-12)
+    np.testing.assert_allclose(float(st_["total"][0]), len(gaps),
+                               rtol=1e-12)
+
+
 def test_fused_tpdt_tdst_matches_separate_calls():
     """The hot-path fusion (one gather + shared suffix cumsum) is exactly
     the two separate selections."""

@@ -1,6 +1,7 @@
 """Plan/execute pipeline: property-style equivalence with the step-loop
-reference engine (all seven policy kinds — incl. the dual-mode FSM ladder
-and coalescing — x FatTree + Megafly, including collect_events), plan
+reference engine (all nine policy kinds — incl. the dual-mode FSM ladder,
+coalescing and the predictive FSMs — x FatTree + Megafly, including
+collect_events), plan
 lowering/segmentation, plan + route caches, and device-residency of the
 hot loop (no transfers, no warm compiles)."""
 import jax
@@ -37,6 +38,12 @@ POLICIES = {
     "perfbound_dual": Policy(kind="perfbound_dual", bound=0.02,
                              sleep_state="fast_wake",
                              deep_state="deep_sleep"),
+    "precoalesce": Policy(kind="precoalesce", t_pdt=2e-5, t_dst=2e-4,
+                          hold_delay=5e-5, hold_frames=4,
+                          sleep_state="fast_wake", deep_state="deep_sleep"),
+    "predict": Policy(kind="predict", t_pdt=2e-5, t_dst=2e-4,
+                      forecast_weight=0.5, forecast_margin=2.0,
+                      sleep_state="fast_wake", deep_state="deep_sleep"),
 }
 
 CHECK_FIELDS = ("makespan", "mean_latency", "max_latency", "n_messages",
@@ -137,6 +144,12 @@ def test_batched_sweep_matches_step_loop(data):
                        sleep_state="fast_wake", deep_state="deep_sleep"),
         "pbd": Policy(kind="perfbound_dual", bound=0.02,
                       sleep_state="fast_wake", deep_state="deep_sleep"),
+        "pre": Policy(kind="precoalesce", t_pdt=1e-5, t_dst=1e-4,
+                      hold_delay=2e-5, hold_frames=4,
+                      sleep_state="fast_wake", deep_state="deep_sleep"),
+        "pred": Policy(kind="predict", t_pdt=1e-5, t_dst=1e-4,
+                       forecast_weight=0.5, forecast_margin=2.0,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
     }
     out = sweep_policies(tr, topo, grid, PM)
     for name, pol in grid.items():

@@ -15,9 +15,10 @@ from repro.core.sweep import group_policies, sweep_policies
 from repro.traffic.trace import Trace
 
 ALL_KINDS = ("none", "fixed", "perfbound", "perfbound_correct",
-             "dual", "coalesce", "perfbound_dual")
+             "dual", "coalesce", "perfbound_dual", "precoalesce", "predict")
 SINGLE_KINDS = ("none", "fixed", "perfbound", "perfbound_correct")
-DUAL_KINDS = ("dual", "coalesce", "perfbound_dual")
+DUAL_KINDS = ("dual", "coalesce", "perfbound_dual", "precoalesce",
+              "predict")
 
 
 def _policy(kind):
@@ -27,6 +28,10 @@ def _policy(kind):
                   t_dst=2e-4)
     if kind == "coalesce":
         kw.update(max_delay=5e-5, max_frames=8)
+    if kind == "precoalesce":
+        kw.update(hold_delay=5e-5, hold_frames=8)
+    if kind == "predict":
+        kw.update(forecast_weight=0.5, forecast_margin=2.0)
     return Policy(kind=kind, t_pdt=1e-5, **kw)
 
 
@@ -93,7 +98,7 @@ def test_no_field_is_doubly_classified():
 
 
 # ---------------------------------------------------------------------------
-# policy_params / canonical_proto round-trip, pinned for all seven kinds
+# policy_params / canonical_proto round-trip, pinned for all nine kinds
 # ---------------------------------------------------------------------------
 
 
@@ -159,12 +164,15 @@ def test_init_state_keeps_hist_when_recording():
 
 
 @pytest.mark.parametrize("kind", ("perfbound", "perfbound_correct",
-                                  "perfbound_dual"))
+                                  "perfbound_dual", "predict"))
 def test_init_state_adaptive_keeps_hist(kind):
     pol = dataclasses.replace(_policy(kind), hist_bins=16)
     st = pb.init_state(4, pol)
     assert st["counts"].shape == (4, 16)
-    assert ("t_dst" in st) == (kind == "perfbound_dual")
+    # the adaptive-demotion kinds carry a per-port t_dst vector; the
+    # forecaster additionally carries its EWMA
+    assert ("t_dst" in st) == (kind in ("perfbound_dual", "predict"))
+    assert ("ewma" in st) == (kind == "predict")
 
 
 # ---------------------------------------------------------------------------
@@ -230,8 +238,9 @@ def test_perfbound_dual_state_under_scenario_grid_batching(topo, pm):
 
 
 def test_new_kinds_batch_and_warm_sweep_compiles_nothing(topo, pm):
-    """dual/coalesce/perfbound_dual group per kind (3 groups for 6
-    policies) and numeric variants reuse the warmed programs: a second
+    """The dual-capable kinds (dual/coalesce/perfbound_dual/precoalesce/
+    predict) group per kind — one static group per kind for two numeric
+    lanes each — and numeric variants reuse the warmed programs: a second
     sweep with different timers compiles ZERO new programs."""
     tr = _tiny_trace(topo)
 

@@ -109,6 +109,58 @@ def test_incast_fan_in_at_flow_cap():
     assert all(len(s.msgs) == 7 for s in msg_steps)
 
 
+def test_stochastic_degenerate_params_emit_valid_windows():
+    """Satellite audit: degenerate catalog edges — rate -> 0, duty cycle
+    pinned to 0/1, an all-hot skew, fan_in <= 0 — must still emit exactly
+    one NON-EMPTY message step per window with src != dst (the dc-*
+    plan-shape guarantee), not divide by zero or crash the samplers."""
+    cases = [
+        ("poisson", dict(rate=0.0), 8),
+        ("poisson", dict(hot_frac=1.0), 8),
+        ("poisson", dict(hot_frac=0.5), 2),     # n_hot clamps below n_nodes
+        ("onoff", dict(rate_off=0.0, p_on=0.0), 8),     # duty cycle 0
+        ("onoff", dict(p_on=1.0, p_stay_on=1.0), 8),    # duty cycle 1
+        ("incast", dict(fan_in=0), 8),
+        ("incast", dict(fan_in=0, background_rate=0.0), 8),
+    ]
+    for i, (builder, extra, n) in enumerate(cases):
+        spec = SC.Scenario(f"t-degen-{i}", "dc", builder, n, seed=11,
+                           params=SC.params_of(windows=4, **extra))
+        tr = SC.build_trace(spec, TINY)
+        msg_steps = [s for s in tr.steps if s.msgs is not None]
+        assert len(msg_steps) == 4, (builder, extra)
+        for s in msg_steps:
+            m = np.asarray(s.msgs)
+            assert len(m) >= 1, (builder, extra)
+            assert np.all(m[:, 0] != m[:, 1]), (builder, extra)
+
+
+def test_stochastic_degenerates_share_plan_shape():
+    """A zero-rate window still occupies one message bucket, so degenerate
+    dc variants keep stacking along the multi-trace axis."""
+    specs = [SC.Scenario("t-degen-a", "dc", "poisson", 8, seed=5,
+                         params=SC.params_of(rate=0.0, windows=6)),
+             SC.Scenario("t-degen-b", "dc", "onoff", 8, seed=5,
+                         params=SC.params_of(rate_off=0.0, p_on=0.0,
+                                             windows=6))]
+    plans = [P.compile_plan(SC.build_trace(s, TINY), TINY) for s in specs]
+    assert len({P.plan_shape_key(p) for p in plans}) == 1
+
+
+def test_stochastic_invalid_params_fail_loudly():
+    """n_nodes < 2 cannot form src != dst pairs and windows < 1 would
+    synthesize an empty trace — both must raise up front, not crash deep
+    inside a sampler (or emit a shape-breaking trace)."""
+    for builder in ("poisson", "onoff", "incast"):
+        with pytest.raises(ValueError, match="n_nodes >= 2"):
+            SC.build_trace(SC.Scenario("t-bad-n", "dc", builder, 1, seed=1),
+                           TINY)
+        with pytest.raises(ValueError, match="windows >= 1"):
+            SC.build_trace(
+                SC.Scenario("t-bad-w", "dc", builder, 8, seed=1,
+                            params=SC.params_of(windows=0)), TINY)
+
+
 def test_ml_grid_derivation():
     assert derive_grid(8) == (4, 2, 1)
     assert derive_grid(16) == (4, 2, 2)

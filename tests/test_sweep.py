@@ -78,6 +78,20 @@ GRID = {
                        sleep_state="fast_wake", deep_state="deep_sleep"),
     "pbd/5pct": Policy(kind="perfbound_dual", bound=0.05, t_dst=1e-4,
                        sleep_state="fast_wake", deep_state="deep_sleep"),
+    # predictive FSM kinds (DESIGN.md §8): hold-at-source coalescing and
+    # the forecast-driven timer ladder, two lanes each
+    "pre/fast": Policy(kind="precoalesce", t_pdt=1e-5, t_dst=2e-4,
+                       hold_delay=2e-5, hold_frames=4,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
+    "pre/slow": Policy(kind="precoalesce", t_pdt=1e-5, t_dst=2e-4,
+                       hold_delay=2e-4, hold_frames=16,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
+    "pred/soft": Policy(kind="predict", t_pdt=1e-5, t_dst=2e-4,
+                        forecast_weight=0.5, forecast_margin=2.0,
+                        sleep_state="fast_wake", deep_state="deep_sleep"),
+    "pred/hard": Policy(kind="predict", t_pdt=1e-5, t_dst=2e-4,
+                        forecast_weight=1.0, forecast_margin=8.0,
+                        sleep_state="fast_wake", deep_state="deep_sleep"),
 }
 
 
@@ -181,6 +195,72 @@ def test_coalesce_parameter_curve_matches_serial(topo, pm):
             np.testing.assert_allclose(
                 got[f"coal/{md:g}/1"].as_dict()[k], dual.as_dict()[k],
                 rtol=1e-12, err_msg=f"coal/{md:g}/1 vs dual: {k}")
+
+
+def test_precoalesce_parameter_curve_matches_serial(topo, pm):
+    """The hold-at-source window — hold_delay x hold_frames lanes — batches
+    as ONE compiled replay of the precoalesce static group, every lane
+    matches its own serial replay, the knobs are live on the batch axis,
+    and a one-frame hold buffer degenerates to the plain dual ladder
+    exactly (DESIGN.md §8)."""
+    tr = _mini_trace(topo, n=10, seed=13)
+    pols = {f"pre/{hd:g}/{hf}": Policy(
+                kind="precoalesce", t_pdt=1e-5, t_dst=2e-4,
+                hold_delay=hd, hold_frames=hf,
+                sleep_state="fast_wake", deep_state="deep_sleep")
+            for hd in (1e-5, 5e-5, 2e-4) for hf in (1, 4, 16)}
+    assert len(W.group_policies(pols)) == 1        # one batched program
+    got = W.sweep_policies(tr, topo, pols, pm)
+    for name, pol in pols.items():
+        want, _ = S.simulate_trace(tr, topo, pol, pm)
+        for k in CHECK_FIELDS:
+            np.testing.assert_allclose(
+                got[name].as_dict()[k], want.as_dict()[k],
+                rtol=1e-9, atol=1e-12, err_msg=f"{name}.{k}")
+    curve = {hd: got[f"pre/{hd:g}/16"].link_energy
+             for hd in (1e-5, 5e-5, 2e-4)}
+    assert len(set(curve.values())) > 1, \
+        f"hold_delay lanes collapsed to one result: {curve}"
+    dual, _ = S.simulate_trace(
+        tr, topo, Policy(kind="dual", t_pdt=1e-5, t_dst=2e-4,
+                         sleep_state="fast_wake", deep_state="deep_sleep"),
+        pm)
+    for hd in (1e-5, 5e-5, 2e-4):
+        for k in CHECK_FIELDS:
+            np.testing.assert_allclose(
+                got[f"pre/{hd:g}/1"].as_dict()[k], dual.as_dict()[k],
+                rtol=1e-12, err_msg=f"pre/{hd:g}/1 vs dual: {k}")
+
+
+def test_predict_parameter_curve_matches_serial(topo, pm):
+    """The forecaster knobs — forecast_weight x forecast_margin lanes —
+    batch as ONE compiled replay of the predict static group, every lane
+    matches its own serial replay, and a zero-weight forecaster (EWMA off,
+    every prediction falls back to the reactive timers) degenerates to the
+    plain dual ladder exactly (DESIGN.md §8)."""
+    tr = _mini_trace(topo, n=10, seed=13)
+    pols = {f"pred/{fw:g}/{fm:g}": Policy(
+                kind="predict", t_pdt=1e-5, t_dst=2e-4,
+                forecast_weight=fw, forecast_margin=fm,
+                sleep_state="fast_wake", deep_state="deep_sleep")
+            for fw in (0.0, 0.5, 1.0) for fm in (1.0, 4.0)}
+    assert len(W.group_policies(pols)) == 1        # one batched program
+    got = W.sweep_policies(tr, topo, pols, pm)
+    for name, pol in pols.items():
+        want, _ = S.simulate_trace(tr, topo, pol, pm)
+        for k in CHECK_FIELDS:
+            np.testing.assert_allclose(
+                got[name].as_dict()[k], want.as_dict()[k],
+                rtol=1e-9, atol=1e-12, err_msg=f"{name}.{k}")
+    dual, _ = S.simulate_trace(
+        tr, topo, Policy(kind="dual", t_pdt=1e-5, t_dst=2e-4,
+                         sleep_state="fast_wake", deep_state="deep_sleep"),
+        pm)
+    for fm in (1.0, 4.0):
+        for k in CHECK_FIELDS:
+            np.testing.assert_allclose(
+                got[f"pred/0/{fm:g}"].as_dict()[k], dual.as_dict()[k],
+                rtol=1e-12, err_msg=f"pred/0/{fm:g} vs dual: {k}")
 
 
 def test_sweep_max_group_split_matches(topo, pm):

@@ -104,6 +104,36 @@ def test_adding_points_never_worsens_winner(degs, energies, degs2,
 
 @settings(max_examples=60)
 @given(degs=VALS, energies=VALS, budget=st.floats(0.0, 10.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_tie_breaking_deterministic_under_permutation(degs, energies,
+                                                      budget, seed):
+    """Satellite invariant: bit-equal (degradation, energy) ties resolve
+    by canonical name, independent of pool enumeration order — a warm
+    tuner rerun that encounters candidates in a different order must
+    reproduce the cold run's winner and survivor ranking exactly."""
+    pts = _points(degs, energies)
+    # shadow every point with a lexicographically-earlier alias carrying
+    # IDENTICAL values: the alias must win its tie everywhere
+    pool = pts + [TunePoint(f"a-{p.name}", p.degradation, p.energy)
+                  for p in pts]
+    perm = list(pool)
+    np.random.default_rng(seed).shuffle(perm)
+    w1 = tuning.budget_winner(pool, budget)
+    w2 = tuning.budget_winner(perm, budget)
+    assert w1 == w2
+    if w1 is not None:
+        best = [p for p in pool if p.degradation <= budget
+                and (p.energy, p.degradation) == (w1.energy,
+                                                  w1.degradation)]
+        assert w1.name == min(p.name for p in best)
+    assert [p.name for p in tuning.rank_candidates(pool, budget)] \
+        == [p.name for p in tuning.rank_candidates(perm, budget)]
+    assert tuning.select_survivors(pool, budget, 3) \
+        == tuning.select_survivors(perm, budget, 3)
+
+
+@settings(max_examples=60)
+@given(degs=VALS, energies=VALS, budget=st.floats(0.0, 10.0),
        keep=st.integers(1, 5))
 def test_survivor_selection(degs, energies, budget, keep):
     pts = _points(degs, energies) + [TunePoint(tuning.BASELINE_NAME,
@@ -157,6 +187,27 @@ def test_dc_winner_beats_fixed_grid_incumbent(dc_report):
             >= inc.row["link_energy_saved_pct"], sc
         # and the search genuinely improved on the coarse grid somewhere
         assert t.winner.row["link_energy_saved_pct"] > 0.0, sc
+
+
+def test_dc_winner_is_a_predictive_kind_beating_incumbent(dc_report):
+    """The PR-6 acceptance gate: the predictive kinds (DESIGN.md §8) must
+    actually WIN the extended search somewhere, not merely participate —
+    on at least one dc-* scenario the budget winner is a predict or
+    precoalesce policy saving strictly more link energy than the PR-5
+    reactive incumbent at the same <= 0.2% budget."""
+    predictive = {}
+    for sc, t in dc_report.scenarios.items():
+        w = t.winner
+        if w.name != tuning.BASELINE_NAME \
+                and w.policy.kind in ("predict", "precoalesce"):
+            predictive[sc] = w
+    assert predictive, "no dc-* scenario tuned to a predictive winner: " \
+        + str({sc: t.winner.name for sc, t in dc_report.scenarios.items()})
+    for sc, w in predictive.items():
+        inc = dc_report.scenarios[sc].points[INCUMBENT]
+        assert w.degradation <= DC_BUDGET, sc
+        assert w.row["link_energy_saved_pct"] \
+            > inc.row["link_energy_saved_pct"], sc
 
 
 def test_dc_refinement_never_worse_than_coarse_incumbent(dc_report):
