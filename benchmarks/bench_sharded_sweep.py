@@ -1,0 +1,94 @@
+"""Sharded multi-device sweep engine vs the single-device baseline.
+
+Three lanes of the SAME dense tuner pass (``tune_scenarios`` over the
+dc-* stack — the PR-5/6 search riding ``sweep_cells`` end to end), so
+the speedup attribution is honest:
+
+  * ``1dev-pow2``   — the single-device engine on power-of-two plans
+    (the pre-existing production path; the baseline row);
+  * ``1dev-ragged`` — same device, ragged/size-class plans
+    (``plan.repack_plans``): the padded-slot reduction is pure
+    inner-scan work removed, so this isolates the memory-audit win;
+  * ``Ndev-ragged`` — ragged plans sharded over every visible device
+    (``distributed.shard_sweep``): adds the mesh win on top.  On a
+    single-core host with forced host-platform devices this lane is
+    expected to be ~flat (XLA host devices share the one core — the
+    mesh win needs real parallel hardware); CI runs it for the compile
+    and bit-identity contracts, not local speedup.
+
+Every lane reports wall time and its speedup vs ``1dev-pow2``; the warm
+pass of ``BENCH_sharded_sweep.json`` must compile ZERO programs
+(``check_compiles.py`` guards ``baselines/compile_counts.json``).
+
+Scales:
+  * tiny  — 4 dc-* scenarios x the 12-candidate ``tiny_space``, 2
+    rounds, 8-node allocations on the 12-node Megafly (CI smoke).
+  * small — dc-* + hpc-* x ``default_space``, 3 rounds, 80-node Megafly.
+  * paper — the whole catalog at 64-node allocations, 4160-node Megafly.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import PM, Row, get_topo, timed
+from repro import tuning
+from repro.distributed import shard_sweep
+
+
+def _setup(scale: str):
+    if scale == "tiny":
+        return (["dc-poisson", "dc-hotspot", "dc-onoff", "dc-incast"], 8,
+                tuning.tiny_space(), 2)
+    if scale == "paper":
+        return None, 64, tuning.default_space(), 3
+    return (["dc-poisson", "dc-hotspot", "dc-onoff", "dc-incast",
+             "hpc-stencil3d", "hpc-stencil2d", "hpc-spectral"], None,
+            tuning.default_space(), 3)
+
+
+def n_policies(scale: str) -> int:
+    return len(tuning.space_candidates(_setup(scale)[2])[0])
+
+
+def _tune(topo, names, n_nodes, space, rounds, packing):
+    return tuning.tune_scenarios(
+        topo, names, budget_pct=1.0, rounds=rounds, space=space,
+        keep=3, n_nodes=n_nodes, pm=PM, packing=packing)
+
+
+def run(scale: str):
+    topo = get_topo(scale)
+    names, n_nodes, space, rounds = _setup(scale)
+    n_dev = jax.device_count()
+
+    report, us_pow2 = timed(_tune, topo, names, n_nodes, space, rounds,
+                            "pow2")
+    cells = sum(r["cells"] for r in report.rounds)
+    rows = [Row("sharded_sweep/1dev-pow2", us_pow2,
+                f"{len(report.scenarios)}scen_{cells}cells_"
+                f"{cells / (us_pow2 / 1e6):.2f}cells_per_s_speedup1.00x")]
+
+    ragged, us_ragged = timed(_tune, topo, names, n_nodes, space, rounds,
+                              "ragged")
+    rows.append(Row("sharded_sweep/1dev-ragged", us_ragged,
+                    f"{cells / (us_ragged / 1e6):.2f}cells_per_s_"
+                    f"speedup{us_pow2 / us_ragged:.2f}x"))
+
+    with shard_sweep.use_mesh():
+        sharded, us_mesh = timed(_tune, topo, names, n_nodes, space,
+                                 rounds, "ragged")
+    rows.append(Row("sharded_sweep/Ndev-ragged", us_mesh,
+                    f"{n_dev}dev_{cells / (us_mesh / 1e6):.2f}cells_per_s_"
+                    f"speedup{us_pow2 / us_mesh:.2f}x"))
+
+    # the contract rows: all three lanes must land on identical winners
+    for sc, t in report.scenarios.items():
+        for other in (ragged, sharded):
+            o = other.scenarios[sc]
+            assert o.winner.name == t.winner.name, \
+                (sc, o.winner.name, t.winner.name)
+            assert o.winner.row == t.winner.row, sc
+        rows.append(Row(
+            f"sharded_sweep/{sc}", us_mesh / len(report.scenarios),
+            f"winner={t.winner.name}_identical_across_lanes"))
+    return rows

@@ -33,6 +33,7 @@ MODULES = [
     ("topology", "benchmarks.bench_topology"),             # beyond paper
     ("scenario_suite", "benchmarks.bench_scenario_suite"),  # beyond paper
     ("tuner", "benchmarks.bench_tuner"),                   # beyond paper
+    ("sharded_sweep", "benchmarks.bench_sharded_sweep"),   # beyond paper
 ]
 
 

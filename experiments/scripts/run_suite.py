@@ -20,6 +20,7 @@ Examples:
         --policies dense --csv suite.csv
 """
 import argparse
+import contextlib
 import csv
 import sys
 import time
@@ -31,7 +32,9 @@ import numpy as np
 from repro import scenarios as SC
 from repro.core.eee import Policy
 from repro.core.sweep import group_policies
+from repro.distributed import shard_sweep
 from repro.topology.megafly import paper_topology, small_topology
+from repro.traffic.plan import PACKINGS, format_cache_info
 
 
 def get_topo(scale):
@@ -86,6 +89,12 @@ def main():
                     default="default")
     ap.add_argument("--max-group", type=int, default=None,
                     help="cap policy-batch width (device memory)")
+    ap.add_argument("--packing", choices=list(PACKINGS), default="pow2",
+                    help="stacked-plan segment layout (ragged: size-class "
+                         "caps + merged tails, same results)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the (trace, lane) grid over all visible "
+                         "devices (repro.distributed.shard_sweep)")
     ap.add_argument("--csv", default=None, metavar="PATH")
     args = ap.parse_args()
 
@@ -112,9 +121,12 @@ def main():
           f"({len(group_policies(grid))} static groups) on "
           f"{topo.n_nodes}-node topology", flush=True)
     t0 = time.time()
-    res = SC.run_suite(topo, scenarios=names, policies=grid,
-                       n_nodes=n_nodes, max_group=args.max_group)
+    with shard_sweep.use_mesh() if args.mesh else contextlib.nullcontext():
+        res = SC.run_suite(topo, scenarios=names, policies=grid,
+                           n_nodes=n_nodes, max_group=args.max_group,
+                           packing=args.packing)
     print(f"# suite done in {time.time() - t0:.1f}s", flush=True)
+    print(f"# {format_cache_info()}", flush=True)
     print(SC.format_table(res))
     for sc, rows in res.items():
         best = min((p for p in rows if p != "baseline"),

@@ -21,6 +21,7 @@ Examples:
         --budget 0.2 --csv tuned.csv
 """
 import argparse
+import contextlib
 import csv
 import os
 import sys
@@ -33,7 +34,9 @@ from run_suite import get_topo
 
 from repro import scenarios as SC
 from repro import tuning
+from repro.distributed import shard_sweep
 from repro.scenarios.catalog import FAMILIES
+from repro.traffic.plan import PACKINGS, format_cache_info
 
 
 def main():
@@ -61,6 +64,12 @@ def main():
                     default="link_energy")
     ap.add_argument("--max-group", type=int, default=None,
                     help="cap policy-batch width (device memory)")
+    ap.add_argument("--packing", choices=list(PACKINGS), default="pow2",
+                    help="stacked-plan segment layout (ragged: size-class "
+                         "caps + merged tails, same results)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the (trace, lane) grid over all visible "
+                         "devices (repro.distributed.shard_sweep)")
     ap.add_argument("--csv", default=None, metavar="PATH")
     args = ap.parse_args()
 
@@ -87,14 +96,17 @@ def main():
           f"budget <= {args.budget:g}%, {args.rounds} rounds on "
           f"{topo.n_nodes}-node topology", flush=True)
     t0 = time.time()
-    report = tuning.tune_scenarios(
-        topo, names, budget_pct=args.budget, rounds=args.rounds,
-        space=space, keep=args.keep, n_nodes=n_nodes,
-        objective=args.objective, max_group=args.max_group)
+    with shard_sweep.use_mesh() if args.mesh else contextlib.nullcontext():
+        report = tuning.tune_scenarios(
+            topo, names, budget_pct=args.budget, rounds=args.rounds,
+            space=space, keep=args.keep, n_nodes=n_nodes,
+            objective=args.objective, max_group=args.max_group,
+            packing=args.packing)
     print(f"# search done in {time.time() - t0:.1f}s; per-round "
           f"(cells, compiles): "
           f"{[(r['cells'], r['compiles']) for r in report.rounds]}",
           flush=True)
+    print(f"# {format_cache_info()}", flush=True)
     print(tuning.format_report(report))
     rows = list(tuning.report_rows(report))
     if args.csv and rows:

@@ -1,0 +1,216 @@
+"""Plan memory audit: padded vs live bytes across the scenario catalog.
+
+The compiled replay pipeline pads every plan segment twice — the message
+axis to a power-of-two capacity bucket (``bucket_cap``, floor
+``BUCKET_MIN`` = 64) and the step axis to a shared per-cap step bucket
+(``step_bucket`` / ``MAX_STEP_PAD``).  Padding buys bounded compile
+counts, but every padded slot is resident device memory AND an inner-scan
+iteration of the executor, so at 1000+-node scale dead slots are both an
+HBM and a wall-clock tax.  This module measures that tax (DESIGN.md §9):
+
+* :func:`audit_plan` — per-segment ``(cap, S_pad, padded_bytes,
+  live_bytes, waste)`` rows for one compiled plan, from the
+  ``host_live`` message counts the planner records per step;
+* :func:`audit_catalog` — the whole scenario catalog at a given topology
+  scale, with a pow2 vs ragged (``repack_plans``) comparison per
+  stackable group;
+* CLI — ``python -m repro.analysis.plan_memory --scales 80,256,1024``
+  prints the DESIGN.md padding-waste table.
+
+"Live" bytes are the bytes a hypothetical exact-fit layout would hold:
+per real step, the fixed per-step arrays plus ``live`` message slots.
+The waste ratio ``1 - live/padded`` is therefore the fraction of plan
+memory (and inner-scan work) spent on padding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.traffic.plan import (
+    TracePlan, compile_plan, group_stackable, plan_nbytes, repack_plans,
+    segment_nbytes, slot_nbytes, step_fixed_nbytes)
+
+
+@dataclass
+class SegmentAudit:
+    """Padding accounting for one plan segment."""
+    cap: int
+    s_pad: int
+    n_steps: int
+    padded_bytes: int
+    live_bytes: int
+
+    @property
+    def waste(self) -> float:
+        """Fraction of the segment's bytes that are padding."""
+        if self.padded_bytes == 0:
+            return 0.0
+        return 1.0 - self.live_bytes / self.padded_bytes
+
+
+@dataclass
+class PlanAudit:
+    """Whole-plan padding accounting (sum over segments)."""
+    name: str
+    n_nodes: int
+    segments: List[SegmentAudit]
+
+    @property
+    def padded_bytes(self) -> int:
+        return sum(s.padded_bytes for s in self.segments)
+
+    @property
+    def live_bytes(self) -> int:
+        return sum(s.live_bytes for s in self.segments)
+
+    @property
+    def waste(self) -> float:
+        pb = self.padded_bytes
+        return 1.0 - self.live_bytes / pb if pb else 0.0
+
+
+def audit_plan(plan: TracePlan, name: Optional[str] = None) -> PlanAudit:
+    """Per-segment padded vs live bytes for one compiled plan."""
+    n, H = plan.n_nodes, plan.max_hops
+    fixed, slot = step_fixed_nbytes(n), slot_nbytes(H)
+    segs = []
+    for seg in plan.segments:
+        live_rows = int(np.count_nonzero(
+            np.abs(np.asarray(seg.xs["delta"])).sum(axis=-1) > 0)
+        ) if seg.cap == 0 else 0
+        real = max(seg.n_steps, live_rows)
+        live = real * fixed
+        if seg.cap and seg.host_live is not None:
+            live += int(seg.host_live.sum()) * slot
+        segs.append(SegmentAudit(
+            cap=seg.cap, s_pad=seg.s_pad, n_steps=seg.n_steps,
+            padded_bytes=segment_nbytes(seg.cap, seg.s_pad, n, H),
+            live_bytes=live))
+    return PlanAudit(name=name or plan.name or "?", n_nodes=n,
+                     segments=segs)
+
+
+@dataclass
+class CatalogAudit:
+    """Catalog-wide audit at one topology scale, pow2 vs ragged."""
+    n_nodes: int
+    plans: List[PlanAudit]                 # pow2 (production default)
+    ragged_bytes: int                      # repacked device bytes
+    pow2_bytes: int                        # current device bytes
+
+    @property
+    def padded_bytes(self) -> int:
+        return sum(p.padded_bytes for p in self.plans)
+
+    @property
+    def live_bytes(self) -> int:
+        return sum(p.live_bytes for p in self.plans)
+
+    @property
+    def waste(self) -> float:
+        pb = self.padded_bytes
+        return 1.0 - self.live_bytes / pb if pb else 0.0
+
+    @property
+    def ragged_saving(self) -> float:
+        return 1.0 - self.ragged_bytes / self.pow2_bytes \
+            if self.pow2_bytes else 0.0
+
+    def worst(self, k: int = 3) -> List[PlanAudit]:
+        return sorted(self.plans, key=lambda p: -p.waste)[:k]
+
+
+def audit_catalog(topo, scenarios=None, n_nodes: Optional[int] = None
+                  ) -> CatalogAudit:
+    """Audit every catalog scenario compiled against ``topo``.
+
+    The ragged comparison repacks per stackable group (the same grouping
+    ``sweep_cells`` batches by), since ``repack_plans`` must keep each
+    group on one ``plan_shape_key``.
+    """
+    from repro.scenarios.spec import build_trace
+    from repro.scenarios.suite import resolve
+
+    specs = resolve(scenarios, n_nodes=n_nodes)
+    plans, audits = [], []
+    for name, spec in specs.items():
+        plan = compile_plan(build_trace(spec, topo), topo)
+        plans.append(plan)
+        audits.append(audit_plan(plan, name))
+    pow2 = sum(plan_nbytes(p) for p in plans)
+    ragged = 0
+    for idxs in group_stackable(plans):
+        ragged += sum(plan_nbytes(p)
+                      for p in repack_plans([plans[i] for i in idxs]))
+    return CatalogAudit(n_nodes=topo.n_nodes, plans=audits,
+                        ragged_bytes=ragged, pow2_bytes=pow2)
+
+
+# ---------------------------------------------------------------------------
+# Reporting
+# ---------------------------------------------------------------------------
+
+#: DESIGN.md §9 scales: node counts -> small_topology(...) constructor args.
+SCALE_TOPOS = {
+    80: dict(),                                              # default
+    256: dict(n_groups=8, leaves=8, spines=8, nodes_per_leaf=4),
+    1024: dict(n_groups=16, leaves=8, spines=8, nodes_per_leaf=8),
+}
+
+
+def scale_topology(n_nodes: int):
+    from repro.topology.megafly import small_topology
+    if n_nodes not in SCALE_TOPOS:
+        raise KeyError(f"no canonical topology for {n_nodes} nodes; "
+                       f"have {sorted(SCALE_TOPOS)}")
+    return small_topology(**SCALE_TOPOS[n_nodes])
+
+
+def table(audits: Dict[int, CatalogAudit], fmt: str = "md") -> str:
+    """The padding-waste table: one row per (scale, worst offenders)."""
+    hdr = ["nodes", "scenarios", "padded_MB", "live_MB", "waste",
+           "ragged_MB", "ragged_saving", "worst"]
+    lines = []
+    if fmt == "md":
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    for n in sorted(audits):
+        a = audits[n]
+        worst = ", ".join(f"{p.name} {p.waste:.0%}" for p in a.worst(3))
+        cells = [str(n), str(len(a.plans)),
+                 f"{a.padded_bytes / 1e6:.2f}", f"{a.live_bytes / 1e6:.2f}",
+                 f"{a.waste:.1%}", f"{a.ragged_bytes / 1e6:.2f}",
+                 f"{a.ragged_saving:.1%}", worst]
+        lines.append("| " + " | ".join(cells) + " |" if fmt == "md"
+                     else ",".join(cells))
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scales", default="80,256",
+                    help="comma list of node counts (80,256,1024)")
+    ap.add_argument("--fmt", choices=["md", "csv"], default="md")
+    ap.add_argument("--per-plan", action="store_true",
+                    help="also print per-scenario rows")
+    args = ap.parse_args(argv)
+    audits = {}
+    for n in (int(s) for s in args.scales.split(",")):
+        audits[n] = audit_catalog(scale_topology(n))
+    print(table(audits, args.fmt))
+    if args.per_plan:
+        for n, a in sorted(audits.items()):
+            print(f"\n# {n} nodes")
+            for p in sorted(a.plans, key=lambda p: -p.waste):
+                print(f"  {p.name:24s} {p.padded_bytes / 1e6:8.2f} MB "
+                      f"padded, {p.live_bytes / 1e6:8.2f} MB live, "
+                      f"{p.waste:6.1%} waste, "
+                      f"{len(p.segments)} segments")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,7 +40,8 @@ from repro.core import replay
 from repro.core import simulator as S
 from repro.core.eee import PowerModel, static_key
 from repro.core.replay import stack_params  # noqa: F401 (public re-export)
-from repro.traffic.plan import compile_plan, group_stackable, stack_plans
+from repro.traffic.plan import (compile_plan, group_stackable,
+                                stack_plans_cached)
 
 
 # ---------------------------------------------------------------------------
@@ -111,7 +112,8 @@ def sweep_policies(trace, topo, policies: dict, pm: PowerModel | None = None,
 
 def sweep_cells(traces: dict, topo, cells: dict,
                 pm: PowerModel | None = None,
-                max_group: int | None = None) -> dict:
+                max_group: int | None = None,
+                packing: str = "pow2") -> dict:
     """Evaluate a RAGGED (trace x policy) grid, batched along both axes.
 
     ``cells`` maps each trace name to its own {policy_name: Policy} dict —
@@ -132,7 +134,20 @@ def sweep_cells(traces: dict, topo, cells: dict,
 
     ``max_group`` caps the policy-batch width exactly as in
     ``sweep_policies``; device memory scales with T x B lanes.
+
+    ``packing`` selects the stacked plans' segment layout: ``"pow2"``
+    (the production default) or ``"ragged"`` (size-class caps + merged
+    tails via ``plan.repack_plans`` — less padding memory and inner-scan
+    work, bit-identical results).  Stacked batches come from the
+    ``stack_plans_cached`` LRU either way, so warm sweeps reuse resident
+    device arrays.
+
+    When a device mesh is active (``repro.distributed.shard_sweep`` —
+    ``use_mesh``/``set_mesh``, or auto mode with >1 visible device), each
+    (T, B) replay dispatches onto the mesh with the plan arrays sharded
+    along the trace axis; results stay bit-identical.
     """
+    from repro.distributed import shard_sweep
     pm = pm or PowerModel()
     tnames = list(cells)
     for tn in tnames:
@@ -143,8 +158,9 @@ def sweep_cells(traces: dict, topo, cells: dict,
     plans = [compile_plan(traces[n], topo) for n in tnames]
     out: dict = {n: {} for n in tnames}
     for idx in group_stackable(plans):
-        batch = stack_plans([plans[i] for i in idx],
-                            [tnames[i] for i in idx])
+        batch = stack_plans_cached([plans[i] for i in idx],
+                                   [tnames[i] for i in idx],
+                                   packing=packing)
         union: dict = {}
         for gi in idx:
             union.update(cells[tnames[gi]])
@@ -153,8 +169,14 @@ def sweep_cells(traces: dict, topo, cells: dict,
             for i in range(0, len(pnames), cap):
                 chunk = pnames[i:i + cap]
                 pols = [union[n] for n in chunk]
-                nets, t_end, lat_sum, lat_max = replay.replay_plans(
-                    batch, pols, pm)
+                mesh = shard_sweep.active_mesh(batch.n_traces, len(chunk))
+                if mesh is not None:
+                    nets, t_end, lat_sum, lat_max = \
+                        shard_sweep.replay_plans_sharded(
+                            batch, pols, pm, mesh)
+                else:
+                    nets, t_end, lat_sum, lat_max = replay.replay_plans(
+                        batch, pols, pm)
                 # one readback for the whole (T, B) grid: per-cell host
                 # numpy views, not one tiny sliced device program per cell
                 nets = jax.tree.map(np.asarray, nets)
@@ -174,7 +196,8 @@ def sweep_cells(traces: dict, topo, cells: dict,
 
 def sweep_scenarios(traces: dict, topo, policies: dict,
                     pm: PowerModel | None = None,
-                    max_group: int | None = None) -> dict:
+                    max_group: int | None = None,
+                    packing: str = "pow2") -> dict:
     """Evaluate a full (traces x policies) grid, batched along BOTH axes.
 
     ``traces`` is {name: Trace}.  Each trace compiles (or fetches) its
@@ -196,4 +219,4 @@ def sweep_scenarios(traces: dict, topo, policies: dict,
     ``sweep_policies``; device memory scales with T x B lanes.
     """
     return sweep_cells(traces, topo, {tn: policies for tn in traces},
-                       pm, max_group=max_group)
+                       pm, max_group=max_group, packing=packing)

@@ -77,7 +77,8 @@ def resolve(scenarios: Optional[Iterable[Union[str, Scenario]]] = None,
 
 def evaluate_grid(traces: Dict, topo, policies: Dict,
                   pm: Optional[PowerModel] = None,
-                  max_group: Optional[int] = None):
+                  max_group: Optional[int] = None,
+                  packing: str = "pow2"):
     """Sweep (traces x policies) with a hidden always-on baseline lane.
 
     The shared front half of :func:`run_suite` and the policy auto-tuner
@@ -93,15 +94,15 @@ def evaluate_grid(traces: Dict, topo, policies: Dict,
     base_key = unused_key(policies)
     grid = sweep_scenarios(traces, topo,
                            {base_key: _BASELINE_POLICY, **policies},
-                           pm, max_group=max_group)
+                           pm, max_group=max_group, packing=packing)
     base = {sc: res.pop(base_key) for sc, res in grid.items()}
     return base, grid
 
 
 def run_suite(topo, scenarios=None, policies: Optional[Dict] = None,
               pm: Optional[PowerModel] = None, n_nodes: Optional[int] = None,
-              max_group: Optional[int] = None, baseline: str = "baseline"
-              ) -> Dict[str, Dict[str, dict]]:
+              max_group: Optional[int] = None, baseline: str = "baseline",
+              packing: str = "pow2") -> Dict[str, Dict[str, dict]]:
     """Sweep (scenarios x policies) and report per-scenario tables.
 
     Returns ``{scenario: {policy: row}}`` where each row is the
@@ -115,7 +116,7 @@ def run_suite(topo, scenarios=None, policies: Optional[Dict] = None,
     specs = resolve(scenarios, n_nodes)
     traces = {name: build_trace(spec, topo) for name, spec in specs.items()}
     base, grid = evaluate_grid(traces, topo, policies, pm,
-                               max_group=max_group)
+                               max_group=max_group, packing=packing)
     return {sc: relative_rows(base[sc], res, baseline)
             for sc, res in grid.items()}
 

@@ -32,7 +32,8 @@ steps via the builder API) is detected and triggers recompilation.
 from __future__ import annotations
 
 import weakref
-from dataclasses import dataclass, field
+from collections import OrderedDict
+from dataclasses import dataclass, field, replace
 from typing import List, Optional
 
 import jax.numpy as jnp
@@ -41,17 +42,39 @@ import numpy as np
 BUCKET_MIN = 64        # smallest message-slot bucket (shared by all engines)
 STEP_BUCKET_MIN = 4    # smallest per-segment step-count bucket
 MAX_STEP_PAD = 32      # cap on shared-bucket padding of a short segment
+RAGGED_MIN = 8         # smallest ragged size-class cap (repack_plans)
+
+PACKINGS = ("pow2", "ragged")
 
 
 def bucket_cap(M: int, bucket_min: int = BUCKET_MIN) -> int:
     """Power-of-two capacity bucket for M messages (identical bucketing
     across the serial, batched, and plan engines keeps their recompilation
-    behaviour aligned)."""
-    return max(bucket_min, 1 << (max(M - 1, 1)).bit_length())
+    behaviour aligned).  M <= 1 needs exactly one slot: ``max(M - 1, 0)``
+    (NOT ``max(M - 1, 1)``, which silently rounded M=0/M=1 up to a 2-slot
+    bucket whenever ``bucket_min`` is 1)."""
+    return max(bucket_min, 1 << max(M - 1, 0).bit_length())
 
 
 def step_bucket(S: int, bucket_min: int = STEP_BUCKET_MIN) -> int:
-    return max(bucket_min, 1 << (max(S - 1, 1)).bit_length())
+    """Power-of-two step-count bucket; same S <= 1 edge rule as
+    ``bucket_cap`` (a single-step segment buckets to 1, not 2, when
+    ``bucket_min`` is 1)."""
+    return max(bucket_min, 1 << max(S - 1, 0).bit_length())
+
+
+def ragged_cap(M: int, ragged_min: int = RAGGED_MIN) -> int:
+    """Size-class capacity for M messages: the {2^k, 3*2^(k-1)} ladder
+    (8, 12, 16, 24, 32, 48, 64, 96, 128, ...) used by the ragged packer.
+    Twice as many classes as the power-of-two ladder bounds worst-case
+    slot waste at 33% instead of 50% while keeping the number of distinct
+    compiled shapes logarithmic in the largest step."""
+    M = max(M, 1)
+    if M <= ragged_min:
+        return ragged_min
+    k = (M - 1).bit_length()             # 2^(k-1) < M <= 2^k
+    three_quarter = 3 << (k - 2) if k >= 2 else 1 << k
+    return three_quarter if M <= three_quarter else 1 << k
 
 
 def _pad_axis(a: np.ndarray, cap: int, axis: int, fill=0) -> np.ndarray:
@@ -108,6 +131,36 @@ class PlanSegment:
     n_steps: int                         # real steps before S-padding
     xs: dict = field(repr=False)         # device arrays, leading dim S_pad
     host_has_msgs: np.ndarray = field(default=None, repr=False)  # (S_pad,)
+    host_live: np.ndarray = field(default=None, repr=False)      # (S_pad,) i32
+
+    @property
+    def s_pad(self) -> int:
+        return int(self.xs["delta"].shape[-2])
+
+    def nbytes(self) -> int:
+        """Device bytes held by this segment's arrays."""
+        return sum(int(np.dtype(x.dtype).itemsize) * int(np.prod(x.shape))
+                   for x in self.xs.values())
+
+
+def slot_nbytes(max_hops: int) -> int:
+    """Device bytes of ONE message slot: src/dst/nhops i32 + bytes f64 +
+    valid bool + per-hop links/dirs i32 pairs."""
+    return 4 + 4 + 4 + 8 + 1 + 8 * max_hops
+
+
+def step_fixed_nbytes(n_nodes: int) -> int:
+    """Per-step device bytes independent of the message cap (clock delta +
+    barrier / has_msgs flags)."""
+    return 8 * n_nodes + 2
+
+
+def segment_nbytes(cap: int, s_pad: int, n_nodes: int, max_hops: int) -> int:
+    """Byte model of a (cap, S_pad) segment — the packer's merge-cost
+    metric and the memory audit's padded-bytes column.  Matches
+    ``PlanSegment.nbytes()`` for segments built by ``_stack_segment``."""
+    per_step = step_fixed_nbytes(n_nodes) + cap * slot_nbytes(max_hops)
+    return s_pad * per_step
 
 
 @dataclass
@@ -195,6 +248,7 @@ def _stack_segment(steps: List[_HostStep], cap: int, n_nodes: int,
     delta = np.zeros((S_pad, n_nodes), np.float64)
     barrier = np.zeros((S_pad,), bool)
     has_msgs = np.zeros((S_pad,), bool)
+    live = np.zeros((S_pad,), np.int32)
     xs = {}
     if cap:
         src = np.zeros((S_pad, cap), np.int32)
@@ -214,6 +268,7 @@ def _stack_segment(steps: List[_HostStep], cap: int, n_nodes: int,
         if ps.msgs is not None:
             M = len(ps.msgs)
             has_msgs[i] = True
+            live[i] = M
             src[i, :M] = ps.msgs[:, 0]
             dst[i, :M] = ps.msgs[:, 1]
             nbytes[i, :M] = ps.msgs[:, 2].astype(np.float64)
@@ -230,7 +285,8 @@ def _stack_segment(steps: List[_HostStep], cap: int, n_nodes: int,
             dst=jnp.asarray(dst), nbytes=jnp.asarray(nbytes),
             links=jnp.asarray(links), dirs=jnp.asarray(dirs),
             nhops=jnp.asarray(nhops), valid=jnp.asarray(valid))
-    return PlanSegment(cap=cap, n_steps=S, xs=xs, host_has_msgs=has_msgs)
+    return PlanSegment(cap=cap, n_steps=S, xs=xs, host_has_msgs=has_msgs,
+                       host_live=live)
 
 
 def topo_signature(topo) -> tuple:
@@ -318,11 +374,20 @@ def _compile(trace, topo, bucket_min: int) -> TracePlan:
 
 # id(trace) -> (weakref(trace), fingerprint, {topo: TracePlan})
 _PLAN_CACHE: dict = {}
+_CACHE_STATS = {"hits": 0, "misses": 0, "stack_hits": 0, "stack_misses": 0}
 
 
 def _fingerprint(trace) -> tuple:
     return (len(trace.steps), trace.n_messages,
             getattr(trace, "version", 0))
+
+
+def plan_nbytes(plan) -> int:
+    """Resident device bytes of a :class:`TracePlan` / :class:`PlanBatch`
+    (segment arrays + participant mask)."""
+    n = sum(seg.nbytes() for seg in plan.segments)
+    pm = plan.part_mask
+    return n + int(np.dtype(pm.dtype).itemsize) * int(np.prod(pm.shape))
 
 
 def compile_plan(trace, topo, bucket_min: int = BUCKET_MIN) -> TracePlan:
@@ -342,17 +407,46 @@ def compile_plan(trace, topo, bucket_min: int = BUCKET_MIN) -> TracePlan:
     plans = entry[2]
     ck = (topo, bucket_min)
     if ck not in plans:
+        _CACHE_STATS["misses"] += 1
         plans[ck] = _compile(trace, topo, bucket_min)
+    else:
+        _CACHE_STATS["hits"] += 1
     return plans[ck]
 
 
 def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
+    _STACK_CACHE.clear()
+    for k in _CACHE_STATS:
+        _CACHE_STATS[k] = 0
 
 
 def plan_cache_info() -> dict:
-    return {"traces": len(_PLAN_CACHE),
-            "plans": sum(len(e[2]) for e in _PLAN_CACHE.values())}
+    """Cache counter surface: per-(trace, topo) plan cache hit/miss counts
+    and resident device bytes, plus the same for the stack-level cache
+    (``stack_plans_cached``) the sharded sweep engine rides."""
+    plans = [p for e in _PLAN_CACHE.values() for p in e[2].values()]
+    stacks = [b for _k, b in _STACK_CACHE.values()]
+    return {"traces": len(_PLAN_CACHE), "plans": len(plans),
+            "hits": _CACHE_STATS["hits"],
+            "misses": _CACHE_STATS["misses"],
+            "resident_bytes": sum(plan_nbytes(p) for p in plans),
+            "stacks": len(_STACK_CACHE),
+            "stack_hits": _CACHE_STATS["stack_hits"],
+            "stack_misses": _CACHE_STATS["stack_misses"],
+            "stack_resident_bytes": sum(plan_nbytes(b) for b in stacks)}
+
+
+def format_cache_info(info: Optional[dict] = None) -> str:
+    """One-line human-readable ``plan_cache_info`` rendering (the
+    run_suite / tune_policies log line)."""
+    i = info if info is not None else plan_cache_info()
+    return (f"plan cache: {i['plans']} plans / {i['traces']} traces, "
+            f"{i['hits']} hits / {i['misses']} misses, "
+            f"{i['resident_bytes'] / 1e6:.2f} MB resident; "
+            f"stacks: {i['stacks']} cached, "
+            f"{i['stack_hits']} hits / {i['stack_misses']} misses, "
+            f"{i['stack_resident_bytes'] / 1e6:.2f} MB resident")
 
 
 # ---------------------------------------------------------------------------
@@ -429,10 +523,12 @@ def stack_plans(plans: List[TracePlan], names: Optional[List[str]] = None
         host_has = np.stack([p.segments[si].host_has_msgs
                              for p in plans]) \
             if seg0.host_has_msgs is not None else None
+        host_live = np.stack([p.segments[si].host_live for p in plans]) \
+            if seg0.host_live is not None else None
         segments.append(PlanSegment(
             cap=seg0.cap,
             n_steps=max(p.segments[si].n_steps for p in plans),
-            xs=xs, host_has_msgs=host_has))
+            xs=xs, host_has_msgs=host_has, host_live=host_live))
     return PlanBatch(
         n_nodes=plans[0].n_nodes, n_links=plans[0].n_links,
         max_hops=plans[0].max_hops,
@@ -450,3 +546,210 @@ def group_stackable(plans: List[TracePlan]) -> List[List[int]]:
     for i, p in enumerate(plans):
         groups.setdefault(plan_shape_key(p), []).append(i)
     return list(groups.values())
+
+
+# ---------------------------------------------------------------------------
+# Ragged repacking: size-class caps + tail-segment merging, stack-uniform
+# ---------------------------------------------------------------------------
+
+
+def _seg_host_xs(seg: PlanSegment, cap: int, H: int) -> dict:
+    """One segment's arrays as host numpy, cap axis resized to ``cap``.
+
+    Shrinking slices the (always-prefix) live slots; growing pads with
+    inert slots (links -1, numerics 0, valid False).  A cap-0 segment
+    materializes an all-inert message table so it can merge into a capped
+    neighbour."""
+    S = seg.s_pad
+    out = {k: np.asarray(v) for k, v in seg.xs.items()}
+    if seg.cap == 0 and cap:
+        out.update(
+            has_msgs=np.zeros((S,), bool),
+            src=np.zeros((S, cap), np.int32),
+            dst=np.zeros((S, cap), np.int32),
+            nbytes=np.zeros((S, cap), np.float64),
+            links=np.full((S, cap, H), -1, np.int32),
+            dirs=np.zeros((S, cap, H), np.int32),
+            nhops=np.zeros((S, cap), np.int32),
+            valid=np.zeros((S, cap), bool))
+        return out
+    if cap < seg.cap:
+        for k in ("src", "dst", "nbytes", "links", "dirs", "nhops", "valid"):
+            out[k] = out[k][:, :cap]
+    elif cap > seg.cap:
+        for k in ("src", "dst", "nbytes", "nhops", "valid"):
+            out[k] = _pad_axis(out[k], cap, 1)
+        out["links"] = _pad_axis(out["links"], cap, 1, -1)
+        out["dirs"] = _pad_axis(out["dirs"], cap, 1)
+    return out
+
+
+def _apply_schedule(plan: TracePlan, schedule: List[tuple]) -> TracePlan:
+    """Materialize a repack ``schedule`` — ``[(members, cap, S_pad), ...]``
+    with ``members`` = ``[(segment_index, keep_rows), ...]`` — for one
+    plan.  Each member keeps its first ``keep_rows`` step rows (the
+    group-wide real step count: everything beyond is shared-bucket
+    padding) and members concatenate along the step axis.  Internal rows
+    past a plan's OWN real steps stay as the executor's no-op padding
+    (has_msgs False, zero clock delta, no barrier), so every plan of a
+    stack group lands on identical array shapes."""
+    H = plan.max_hops
+    segments = []
+    for members, cap, S_pad in schedule:
+        segs = [plan.segments[si] for si, _ in members]
+        hxs = [{k: v[:keep] for k, v in _seg_host_xs(s, cap, H).items()}
+               for s, (_, keep) in zip(segs, members)]
+        keys = ["delta", "barrier"] + (
+            ["has_msgs", "src", "dst", "nbytes", "links", "dirs", "nhops",
+             "valid"] if cap else [])
+        xs = {k: np.concatenate([h[k] for h in hxs]) for k in keys}
+        S = xs["delta"].shape[0]
+        for k in keys:
+            xs[k] = _pad_axis(xs[k], S_pad, 0,
+                              -1 if k == "links" else 0)
+        host_has = _pad_axis(np.concatenate(
+            [s.host_has_msgs[:keep]
+             for s, (_, keep) in zip(segs, members)]), S_pad, 0)
+        host_live = _pad_axis(np.concatenate(
+            [s.host_live[:keep]
+             for s, (_, keep) in zip(segs, members)]), S_pad, 0)
+        segments.append(PlanSegment(
+            cap=cap, n_steps=S,
+            xs={k: jnp.asarray(v) for k, v in xs.items()},
+            host_has_msgs=host_has, host_live=host_live))
+    return replace(plan, segments=segments)
+
+
+def repack_plans(plans: List[TracePlan],
+                 ragged_min: int = RAGGED_MIN) -> List[TracePlan]:
+    """Jointly repack same-shape plans into ragged size-class segments.
+
+    The memory-audit remedy (DESIGN.md §9): power-of-two buckets with
+    ``BUCKET_MIN`` = 64 leave 70–94% of message slots as padding across the
+    catalog, and the executor's inner scan walks every padded slot.  This
+    pass, applied to a WHOLE stackable group at once so the repacked plans
+    still share one ``plan_shape_key`` (the contract every batching layer
+    leans on):
+
+      * **shrinks caps to size classes** — each segment's cap drops to the
+        ``ragged_cap`` class of the largest LIVE step across the group
+        (splitting the oversized power-of-two bucket; never grows);
+      * **merges tail segments** — adjacent segments merge greedily into
+        the larger cap whenever the byte model (``segment_nbytes``) says
+        the merged segment is cheaper than the step-bucket padding of two
+        separate ones (fragmented traces collapse to few segments, fewer
+        compiled shapes);
+      * re-applies the shared same-cap step-bucket rule of ``_compile``
+        (bounded by ``MAX_STEP_PAD``), so compile counts stay bounded by
+        distinct (cap, S-bucket) pairs exactly as before.
+
+    Results are bit-identical to the power-of-two plans: padding slots are
+    masked out of every state update and reduction (``tests/
+    test_plan_memory.py`` pins ragged == pow2 == serial reference).
+    Returns the input list unchanged when no segment shrinks or merges.
+    """
+    assert plans, "repack_plans needs at least one plan"
+    key0 = plan_shape_key(plans[0])
+    for p in plans[1:]:
+        assert plan_shape_key(p) == key0, \
+            "repack_plans operates on one stackable group at a time"
+    n_nodes, H = plans[0].n_nodes, plans[0].max_hops
+    segs0 = plans[0].segments
+
+    # -- per-segment joint size class (shrink only) -----------------------
+    caps = []
+    for si, seg in enumerate(segs0):
+        if seg.cap == 0:
+            caps.append(0)
+            continue
+        mx = max(int(p.segments[si].host_live.max(initial=0))
+                 for p in plans)
+        caps.append(min(seg.cap, ragged_cap(mx, ragged_min)))
+
+    # Group-wide real step counts: rows beyond them are shared-bucket
+    # padding every plan agrees on, so the repack drops them up front and
+    # re-pads once at the end (they are what makes short tail fragments
+    # expensive and mergeable).
+    reals = [max(p.segments[si].n_steps for p in plans)
+             for si in range(len(segs0))]
+
+    # -- greedy adjacent merging on the byte model ------------------------
+    groups = [[(si, reals[si])] for si in range(len(segs0))]
+    gcaps = list(caps)
+    glens = list(reals)                      # concatenated real steps
+
+    def cost(cap: int, s: int) -> int:
+        return segment_nbytes(cap, step_bucket(s), n_nodes, H)
+
+    merged = True
+    while merged and len(groups) > 1:
+        merged = False
+        best = None
+        for i in range(len(groups) - 1):
+            cap_m = max(gcaps[i], gcaps[i + 1])
+            save = (cost(gcaps[i], glens[i])
+                    + cost(gcaps[i + 1], glens[i + 1])
+                    - cost(cap_m, glens[i] + glens[i + 1]))
+            if save > 0 and (best is None or save > best[0]):
+                best = (save, i)
+        if best is not None:
+            _, i = best
+            groups[i] = groups[i] + groups.pop(i + 1)
+            gcaps[i] = max(gcaps[i], gcaps.pop(i + 1))
+            glens[i] = glens[i] + glens.pop(i + 1)
+            merged = True
+
+    # -- shared same-cap step buckets (mirrors _compile) ------------------
+    cap_bucket: dict = {}
+    for cap, s in zip(gcaps, glens):
+        cap_bucket[cap] = max(cap_bucket.get(cap, 0), step_bucket(s))
+    spads = [min(cap_bucket[cap], MAX_STEP_PAD * step_bucket(s))
+             for cap, s in zip(gcaps, glens)]
+
+    schedule = list(zip(groups, gcaps, spads))
+    if all(len(m) == 1 and cap == segs0[m[0][0]].cap
+           and sp == segs0[m[0][0]].s_pad
+           for m, cap, sp in schedule):
+        return list(plans)               # nothing to gain — keep originals
+    return [_apply_schedule(p, schedule) for p in plans]
+
+
+# ---------------------------------------------------------------------------
+# Stack-level cache: (plans, packing) -> PlanBatch, shared by warm sweeps
+# ---------------------------------------------------------------------------
+
+# (plan ids, names, packing) -> ((plans strong refs), PlanBatch); LRU
+_STACK_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_STACK_CACHE_MAX = 64
+
+
+def stack_plans_cached(plans: List[TracePlan],
+                       names: Optional[List[str]] = None,
+                       packing: str = "pow2") -> PlanBatch:
+    """``stack_plans`` behind a bounded LRU, with optional ragged repacking.
+
+    Stacking re-uploads every segment array (``jnp.stack``); the tuner's
+    refinement rounds and every warm sweep used to pay that per call.  The
+    cache keys on plan identity (stable through the per-(trace, topo) plan
+    cache) + the packing mode, so a warm rerun reuses the stacked — and,
+    under ``packing='ragged'``, repacked — device arrays outright.  The
+    sharded engine (``repro.distributed.shard_sweep``) keys its per-device
+    placement off these batches, giving the device-local
+    (trace, topo, shard) plan-cache chain.
+    """
+    assert packing in PACKINGS, f"packing {packing!r} not in {PACKINGS}"
+    names = list(names) if names is not None \
+        else [p.name or f"trace{i}" for i, p in enumerate(plans)]
+    key = (tuple(id(p) for p in plans), tuple(names), packing)
+    hit = _STACK_CACHE.get(key)
+    if hit is not None:
+        _CACHE_STATS["stack_hits"] += 1
+        _STACK_CACHE.move_to_end(key)
+        return hit[1]
+    _CACHE_STATS["stack_misses"] += 1
+    packed = repack_plans(plans) if packing == "ragged" else plans
+    batch = stack_plans(packed, names)
+    _STACK_CACHE[key] = (tuple(plans), batch)
+    while len(_STACK_CACHE) > _STACK_CACHE_MAX:
+        _STACK_CACHE.popitem(last=False)
+    return batch

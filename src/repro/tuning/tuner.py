@@ -118,7 +118,8 @@ def tune_scenarios(topo, scenarios=None, *, budget_pct: float = 1.0,
                    max_group: Optional[int] = None,
                    objective: str = "link_energy",
                    pm: Optional[PowerModel] = None,
-                   compile_budget: Optional[int] = None) -> TuneReport:
+                   compile_budget: Optional[int] = None,
+                   packing: str = "pow2") -> TuneReport:
     """Search the policy space for every scenario, batched.
 
     ``scenarios`` accepts catalog names / Scenario specs (default: the
@@ -132,6 +133,11 @@ def tune_scenarios(topo, scenarios=None, *, budget_pct: float = 1.0,
     ``compile_budget`` (when not None) runs the WHOLE search under
     ``instrument.compile_guard`` — pass 0 on a warm rerun to hard-assert
     that every round reuses the cold run's programs.
+
+    ``packing`` passes through to ``sweep_cells`` (``"ragged"`` repacks
+    stacked plans into size-class segments — same results, less padding).
+    The search goes multi-device transparently when a mesh is active
+    (``repro.distributed.shard_sweep.use_mesh``).
 
     Returns a :class:`TuneReport`; per-round compile counts land in
     ``report.rounds`` so callers can pin cache behaviour.
@@ -152,7 +158,8 @@ def tune_scenarios(topo, scenarios=None, *, budget_pct: float = 1.0,
         # ---- round 0: the coarse grid, every scenario ---------------------
         with count_compiles() as cc:
             base, res0 = evaluate_grid(traces, topo, grid0, pm,
-                                       max_group=max_group)
+                                       max_group=max_group,
+                                       packing=packing)
         tunings = {}
         for sc in traces:
             points = {BASELINE_NAME: _baseline_point(base[sc], objective)}
@@ -183,7 +190,8 @@ def tune_scenarios(topo, scenarios=None, *, budget_pct: float = 1.0,
                 break                    # every neighbourhood converged
             with count_compiles() as cc:
                 res_r = sweep_cells({sc: traces[sc] for sc in cells}, topo,
-                                    cells, pm, max_group=max_group)
+                                    cells, pm, max_group=max_group,
+                                    packing=packing)
             for sc, results in res_r.items():
                 tunings[sc].points.update(_points_from(
                     results, base[sc], cells[sc], objective, r))
