@@ -1,0 +1,97 @@
+"""Serial vs plan-scheduled message-phase replay (DESIGN.md §10).
+
+Times warm whole-plan replays of the two most message-phase-bound catalog
+scenarios — ``dc-incast`` (bottleneck links, near-serial conflict chains)
+and ``ml-qwen3-moe`` (alltoall dispatch bursts) — under the wavefront
+modes.  The serial executor spends ``cap`` inner-scan iterations per
+message step (``BUCKET_MIN`` = 64 pads far past the live message count at
+these scales); mode ``on`` runs the plan-scheduled phase — the dynamic
+valid-prefix loop or chained conflict-free waves, whichever the segment
+cost model picks — and ``auto`` may additionally keep the scan.  The
+``off/on`` ratio measures what the plan-time schedule buys end to end.
+All modes replay bit-identical results (tests/test_wavefront.py).
+
+Policies are grouped by static structure exactly like the sweep layer
+(one compiled program per group), so each kind really exercises its own
+executor: the adaptive ``perfbound`` group rides the prefix loop, the
+FSM-only kinds pick prefix or chained waves.
+
+Scales:
+  * tiny  — 8-node allocations on the 12-node Megafly, 5-policy grid:
+    the CI smoke lane (compile-count baseline ``wavefront``).
+  * small — 16-node allocations on the 80-node Megafly.
+  * paper — 64-node allocations on the 4160-node Megafly.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import PM, Row, get_topo
+from repro.core import replay
+from repro.core.eee import Policy
+from repro.core.sweep import group_policies
+from repro.scenarios.spec import build_trace
+from repro.scenarios.suite import resolve
+from repro.traffic.plan import compile_plan
+
+SCENARIOS = ["dc-incast", "ml-qwen3-moe"]
+MODES = ("off", "on", "auto")
+REPS = {"tiny": 5, "small": 3, "paper": 1}
+
+
+def _grid() -> dict:
+    return {
+        "none": Policy(kind="none"),
+        "fixed": Policy(kind="fixed", t_pdt=1e-4, sleep_state="deep_sleep"),
+        "perfbound": Policy(kind="perfbound", bound=0.01),
+        "dual": Policy(kind="dual", t_pdt=1e-5, t_dst=2e-4,
+                       sleep_state="fast_wake", deep_state="deep_sleep"),
+        "coalesce": Policy(kind="coalesce", t_pdt=1e-5, t_dst=2e-4,
+                           max_delay=5e-5, max_frames=4,
+                           sleep_state="fast_wake",
+                           deep_state="deep_sleep"),
+    }
+
+
+def n_policies(scale: str) -> int:
+    return len(_grid())
+
+
+def _replay(plan, groups):
+    t_end = 0.0
+    for pols in groups:
+        out = replay.replay_plan(plan, pols, PM)
+        t_end = float(out[1][0])
+    return t_end
+
+
+def run(scale: str):
+    topo = get_topo(scale)
+    n_nodes = {"tiny": 8, "small": 16, "paper": 64}[scale]
+    grid = _grid()
+    groups = [[grid[n] for n in names] for names in group_policies(grid)]
+    reps = REPS[scale]
+    rows = []
+    for name, spec in resolve(SCENARIOS, n_nodes=n_nodes).items():
+        plan = compile_plan(build_trace(spec, topo), topo)
+        widths = [(s.cap, s.wave_width, s.mean_live)
+                  for s in plan.segments if s.cap]
+        warm = {}
+        for mode in MODES:
+            with replay.wavefront_mode(mode):
+                _replay(plan, groups)                 # cold (compile) pass
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    t_end = _replay(plan, groups)
+                warm[mode] = (time.perf_counter() - t0) * 1e6 / reps
+            assert t_end > 0.0
+        speedup = warm["off"] / warm["on"]
+        rows.append(Row(
+            f"wavefront/{name}", warm["on"],
+            f"serial{warm['off'] / 1e3:.1f}ms_wave{warm['on'] / 1e3:.1f}ms_"
+            f"auto{warm['auto'] / 1e3:.1f}ms_speedup{speedup:.2f}x"))
+        rows.append(Row(
+            f"wavefront/{name}/widths", 0.0,
+            "W,live_vs_cap=" + "|".join(f"{w},{lv:.0f}of{c}"
+                                        for c, w, lv in widths)))
+    return rows

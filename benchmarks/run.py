@@ -34,6 +34,7 @@ MODULES = [
     ("scenario_suite", "benchmarks.bench_scenario_suite"),  # beyond paper
     ("tuner", "benchmarks.bench_tuner"),                   # beyond paper
     ("sharded_sweep", "benchmarks.bench_sharded_sweep"),   # beyond paper
+    ("wavefront", "benchmarks.bench_wavefront"),           # DESIGN.md §10
 ]
 
 

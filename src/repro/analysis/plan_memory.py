@@ -42,6 +42,9 @@ class SegmentAudit:
     n_steps: int
     padded_bytes: int
     live_bytes: int
+    wave_width: int = 0
+    mean_live: float = 0.0
+    mean_wave: float = 0.0
 
     @property
     def waste(self) -> float:
@@ -49,6 +52,14 @@ class SegmentAudit:
         if self.padded_bytes == 0:
             return 0.0
         return 1.0 - self.live_bytes / self.padded_bytes
+
+    @property
+    def wave_contraction(self) -> float:
+        """Inner-loop trip-count ratio wavefront buys: wave_width / cap
+        (1.0 = no win; DESIGN.md §10)."""
+        if self.cap == 0:
+            return 1.0
+        return max(self.wave_width, 1) / self.cap
 
 
 @dataclass
@@ -88,7 +99,10 @@ def audit_plan(plan: TracePlan, name: Optional[str] = None) -> PlanAudit:
         segs.append(SegmentAudit(
             cap=seg.cap, s_pad=seg.s_pad, n_steps=seg.n_steps,
             padded_bytes=segment_nbytes(seg.cap, seg.s_pad, n, H),
-            live_bytes=live))
+            live_bytes=live,
+            wave_width=seg.wave_width if seg.cap else 0,
+            mean_live=seg.mean_live if seg.cap else 0.0,
+            mean_wave=seg.mean_wave if seg.cap else 0.0))
     return PlanAudit(name=name or plan.name or "?", n_nodes=n,
                      segments=segs)
 
@@ -189,6 +203,46 @@ def table(audits: Dict[int, CatalogAudit], fmt: str = "md") -> str:
     return "\n".join(lines)
 
 
+def wave_table(audits: Dict[int, CatalogAudit], fmt: str = "md") -> str:
+    """Per-catalog wave width / live count vs cap (DESIGN.md §10): how far
+    plan-time conflict scheduling contracts the executor's inner message
+    loop, and which lowering the ``auto`` cost model picks per segment
+    (for a chain-capable proto)."""
+    from repro.core import replay as R
+    hdr = ["nodes", "cap", "segments", "max_W", "mean_W", "mean_live",
+           "mean_W/cap", "auto_pick"]
+    lines = []
+    if fmt == "md":
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    for n in sorted(audits):
+        by_cap: Dict[int, List[SegmentAudit]] = {}
+        for p in audits[n].plans:
+            for s in p.segments:
+                if s.cap:
+                    by_cap.setdefault(s.cap, []).append(s)
+        for cap in sorted(by_cap):
+            segs = by_cap[cap]
+            ws = [s.wave_width for s in segs]
+            picks: Dict[str, int] = {"scan": 0, "prefix": 0, "chain": 0}
+            for s in segs:
+                costs = {"scan": R.SCAN_SLOT_US * cap,
+                         "prefix": R.PREFIX_FIXED_US
+                         + R.PREFIX_SLOT_US * s.mean_live,
+                         "chain": R.CHAIN_FIXED_US
+                         + R.WAVE_US * s.mean_wave}
+                picks[min(costs, key=costs.get)] += 1
+            pick = "|".join(f"{k}:{v}" for k, v in picks.items() if v)
+            cells = [str(n), str(cap), str(len(segs)), str(max(ws)),
+                     f"{np.mean(ws):.1f}",
+                     f"{np.mean([s.mean_live for s in segs]):.1f}",
+                     f"{np.mean([s.wave_contraction for s in segs]):.2f}",
+                     pick]
+            lines.append("| " + " | ".join(cells) + " |" if fmt == "md"
+                         else ",".join(cells))
+    return "\n".join(lines)
+
+
 def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -197,11 +251,16 @@ def main(argv=None):
     ap.add_argument("--fmt", choices=["md", "csv"], default="md")
     ap.add_argument("--per-plan", action="store_true",
                     help="also print per-scenario rows")
+    ap.add_argument("--waves", action="store_true",
+                    help="also print the wave width vs cap table")
     args = ap.parse_args(argv)
     audits = {}
     for n in (int(s) for s in args.scales.split(",")):
         audits[n] = audit_catalog(scale_topology(n))
     print(table(audits, args.fmt))
+    if args.waves:
+        print()
+        print(wave_table(audits, args.fmt))
     if args.per_plan:
         for n, a in sorted(audits.items()):
             print(f"\n# {n} nodes")

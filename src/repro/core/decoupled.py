@@ -22,26 +22,26 @@ from repro.core.eee import Policy, PowerModel
 from repro.kernels import ops
 
 
-def events_to_streams(events, n_links, t_end):
-    """events: list of (link, t_start, t_end) host arrays from
-    ``simulate_trace(..., collect_events=True)``.
-
-    Returns gaps (E,P) f32, durs (E,P) f32, tail (P,) f32 — per-link idle
-    gap before each busy interval (merged across both directions) and the
-    closing idle tail up to ``t_end``.
-    """
-    lp = np.concatenate([e[0] for e in events])
-    ts = np.concatenate([e[1] for e in events])
-    te = np.concatenate([e[2] for e in events])
+def _sorted_events(events):
+    lp = np.concatenate([np.asarray(e[0]) for e in events]) \
+        if events else np.zeros(0, np.int64)
+    ts = np.concatenate([np.asarray(e[1], np.float64) for e in events]) \
+        if events else np.zeros(0, np.float64)
+    te = np.concatenate([np.asarray(e[2], np.float64) for e in events]) \
+        if events else np.zeros(0, np.float64)
     order = np.lexsort((ts, lp))
-    lp, ts, te = lp[order], ts[order], te[order]
+    return lp[order], ts[order], te[order]
 
+
+def _events_to_streams_ref(events, n_links, t_end):
+    """Scalar reference of the merge (the pre-vectorization loop) — kept
+    as the semantics oracle for tests/test_decoupled.py."""
+    lp, ts, te = _sorted_events(events)
     counts = np.bincount(lp, minlength=n_links)
     E = max(int(counts.max(initial=1)), 1)
     P = n_links
     gaps = np.zeros((E, P), np.float32)
     durs = np.zeros((E, P), np.float32)
-    tail = np.full((P,), t_end, np.float32)
 
     pos = np.zeros(P, np.int64)
     last = np.zeros(P, np.float64)
@@ -57,6 +57,82 @@ def events_to_streams(events, n_links, t_end):
         pos[l] += 1
         last[l] = e
     tail = (t_end - last).astype(np.float32)
+    return gaps, durs, tail
+
+
+def events_to_streams(events, n_links, t_end):
+    """events: list of (link, t_start, t_end) host arrays from
+    ``simulate_trace(..., collect_events=True)``.
+
+    Returns gaps (E,P) f32, durs (E,P) f32, tail (P,) f32 — per-link idle
+    gap before each busy interval (merged across both directions) and the
+    closing idle tail up to ``t_end``.
+
+    Fully vectorized (lexsort + segmented prefix maxima); bit-identical to
+    the scalar merge loop it replaced (``_events_to_streams_ref``): the
+    per-link ``last`` watermark is a running max of interval ends, so
+    run starts, per-run rows, and the f64->f32 rounding chain of repeated
+    run extensions all fall out of prefix ops.
+    """
+    lp, ts, te = _sorted_events(events)
+    counts = np.bincount(lp, minlength=n_links)
+    E = max(int(counts.max(initial=1)), 1)
+    P = n_links
+    gaps = np.zeros((E, P), np.float32)
+    durs = np.zeros((E, P), np.float32)
+    last_fin = np.zeros(P, np.float64)
+    n = lp.size
+    if n == 0:
+        return (jnp.asarray(gaps), jnp.asarray(durs),
+                jnp.asarray((t_end - last_fin).astype(np.float32)))
+
+    idx = np.arange(n)
+    grp_start = np.empty(n, bool)
+    grp_start[0] = True
+    grp_start[1:] = lp[1:] != lp[:-1]
+    start = np.maximum.accumulate(np.where(grp_start, idx, 0))
+
+    # last_before[i] = the scalar loop's ``last[l]`` seen by event i: the
+    # running max of earlier interval ends in the link group, clamped >=0.
+    # Exclusive shift within the group, then a segmented inclusive cummax
+    # by logarithmic doubling.
+    prev = np.empty(n, np.float64)
+    prev[0] = 0.0
+    prev[1:] = te[:-1]
+    prev[grp_start] = 0.0
+    last_before = np.maximum(prev, 0.0)
+    d = 1
+    while d < n:
+        ok = idx >= start + d
+        cand = np.where(ok, np.concatenate(
+            [np.full(d, -np.inf), last_before[:-d]]), -np.inf)
+        last_before = np.maximum(last_before, cand)
+        d *= 2
+
+    # run segmentation: every group's first event opens a run (s >= 0)
+    is_new = ts >= last_before
+    run = np.cumsum(is_new) - 1          # global run id
+    row = run - run[start]               # per-link row = scalar pos[l]
+
+    gaps[row[is_new], lp[is_new]] = ts[is_new] - last_before[is_new]
+    durs[row[is_new], lp[is_new]] = te[is_new] - ts[is_new]
+
+    # overlap extensions: apply in lockstep rank rounds so repeated
+    # extensions of one run replay the exact f32 += rounding sequence
+    ext = np.flatnonzero(~is_new & (te > last_before))
+    if ext.size:
+        er = run[ext]
+        first = np.empty(ext.size, bool)
+        first[0] = True
+        first[1:] = er[1:] != er[:-1]
+        rank = np.arange(ext.size) - np.maximum.accumulate(
+            np.where(first, np.arange(ext.size), 0))
+        for r in range(int(rank.max()) + 1):
+            sel = ext[rank == r]
+            durs[row[sel], lp[sel]] += te[sel] - last_before[sel]
+
+    np.maximum.at(last_fin, lp, te)
+    tail = (t_end - last_fin).astype(np.float32)
     return jnp.asarray(gaps), jnp.asarray(durs), jnp.asarray(tail)
 
 

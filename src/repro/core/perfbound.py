@@ -135,12 +135,14 @@ def _initial_tpdt(policy, params=None):
 
 # ---------------------------------------------------------------------------
 # Updates (batched over K link slots; links within a batch must be distinct,
-# which minimal routing guarantees for the hops of one message)
+# which minimal routing guarantees for the hops of one message — and which
+# the wavefront executor's link-disjoint waves extend to the (m, H) slots
+# of a whole wave of messages at once)
 # ---------------------------------------------------------------------------
 
 
 def record_gaps(st, lp, gap, t_now, active, policy, params=None):
-    """Insert inactivity gaps.  lp,gap,t_now,active: (K,)."""
+    """Insert inactivity gaps.  lp,gap,t_now,active: (K,) or (m, H)."""
     p = _params(policy, params)
     do = active & (gap > 0)
     b = bin_index(gap, policy, p)
@@ -185,7 +187,7 @@ def record_gaps(st, lp, gap, t_now, active, policy, params=None):
     if policy.hist_decay < 1.0:
         # exponential recency bias (beyond-paper, paper §5 future work):
         # old evidence fades at ``hist_decay`` per new sample on that port
-        d = jnp.where(do, p["hist_decay"], 1.0)[:, None]
+        d = jnp.where(do, p["hist_decay"], 1.0)[..., None]
         counts = counts.at[lp].multiply(d)
         sums = sums.at[lp].multiply(d)
         # the budget window X follows the effective sample horizon
@@ -202,11 +204,10 @@ def record_gaps(st, lp, gap, t_now, active, policy, params=None):
 
     if policy.hist_mode == "self_clear":
         clear = active & (total[lp] >= p["hist_clear_n"])
-        zrow = jnp.zeros((lp.shape[0], policy.hist_bins), jnp.float64)
         st["counts"] = st["counts"].at[lp].set(
-            jnp.where(clear[:, None], zrow, st["counts"][lp]))
+            jnp.where(clear[..., None], 0.0, st["counts"][lp]))
         st["sums"] = st["sums"].at[lp].set(
-            jnp.where(clear[:, None], zrow, st["sums"][lp]))
+            jnp.where(clear[..., None], 0.0, st["sums"][lp]))
         st["total"] = st["total"].at[lp].set(
             jnp.where(clear, 0, st["total"][lp]))
         st["win_start"] = st["win_start"].at[lp].set(

@@ -94,10 +94,31 @@ def init_net(n_links, policy: Policy, params=None):
 # ---------------------------------------------------------------------------
 
 
-def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
-                  params=None):
-    links, dirs, nhops, t_inj, nbytes, valid = msg
+def _slot_rows(links, dirs, nhops, valid, n_links):
+    """Per-slot row ids: (active mask, link row ``lp``, directed row ``dp``).
+    Inactive slots land on the dummy rows (``n_links`` / ``2*n_links``)."""
     H = links.shape[-1]           # route width (Megafly 5, fat-tree 6, ...)
+    active = (jnp.arange(H) < nhops[..., None]) & valid[..., None] \
+        & (links >= 0)
+    lp = jnp.where(active, links, n_links)                 # dummy row when off
+    dp = jnp.where(active, 2 * links + dirs, 2 * n_links)
+    return active, lp, dp
+
+
+def _slot_compute(g, msg, active, policy: Policy, pm: PowerModel,
+                  params=None):
+    """FSM + energy arithmetic of one message (or a batch of link-disjoint
+    messages) as a PURE elementwise function of gathered row state.
+
+    ``g`` carries the slot views (same leading shape as ``links``):
+    ``free`` (directed occupancy), ``last``/``dl``/``dl2`` (accounting
+    frontier + FSM deadlines) and, for the coalescing kinds, the ``coal``
+    triple.  Each slot's outputs depend only on its own message's slots
+    and its gathered inputs — the serial scatter path and the chained
+    wavefront path (replay.py) both consume this, which is what makes
+    their results bit-identical by construction (DESIGN.md §10)."""
+    links, dirs, nhops, t_inj, nbytes, valid = msg
+    H = links.shape[-1]
     p = pb._params(policy, params)
     t_w = p["t_w"] + p["sync_overhead"]
     t_s = p["t_s"]
@@ -110,17 +131,12 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     coal = policy.kind == "coalesce"
     pre = policy.kind == "precoalesce"
     defer_on = coal or pre
-
-    active = (jnp.arange(H) < nhops) & valid & (links >= 0)
-    lp = jnp.where(active, links, n_links)                 # dummy row when off
-    dp = jnp.where(active, 2 * links + dirs, 2 * n_links)
     t_ser = nbytes / pm.link_bandwidth
 
-    free = net["dir_free"][dp]
-    last = net["last_end"][lp]
-    dl = net["deadline"][lp]
-    dl2 = net["deadline2"][lp]
-    tpdt_prev = net["pred"]["tpdt"][lp]
+    free = g["free"]
+    last = g["last"]
+    dl = g["dl"]
+    dl2 = g["dl2"]
     if defer_on:
         # wake deferral for the frame that would wake a sleeping port:
         # full max_delay, scaled down when the previous cycle's burst
@@ -131,13 +147,9 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
         # precoalesce runs the SAME cycle machinery with its own knobs
         # (hold_delay/hold_frames) on separate carries, restricted below
         # to the injection hop.
-        ck = ("coal_n", "coal_prev", "coal_release") if coal \
-            else ("pre_n", "pre_prev", "pre_release")
         d_delay = p["max_delay"] if coal else p["hold_delay"]
         d_frames = p["max_frames"] if coal else p["hold_frames"]
-        coal_n_g = net[ck[0]][lp]
-        coal_prev_g = net[ck[1]][lp]
-        coal_release_g = net[ck[2]][lp]
+        coal_n_g, coal_prev_g, coal_release_g = g["coal"]
         prev_burst = jnp.where(coal_n_g > 0, coal_n_g, coal_prev_g)
         defer_full = jnp.where(
             d_frames > 1.0,
@@ -145,8 +157,8 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
             / jnp.maximum(prev_burst, d_frames), 0.0)
         # hold-at-source: frames queue at the injection link (hop 0) only;
         # downstream hops never defer
-        at_src = (jnp.arange(H) == 0) if pre \
-            else jnp.ones((H,), bool)
+        at_src = jnp.broadcast_to((jnp.arange(H) == 0) if pre
+                                  else jnp.ones((H,), bool), active.shape)
         defer_amt = jnp.where(at_src, defer_full, 0.0)
 
     def _fsm(ta, dl_h, dl2_h, defer_h):
@@ -164,29 +176,29 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
 
     # ---- unrolled 5-hop time chain (register-only) -----------------------
     t_head = t_inj
-    t_avail = jnp.zeros((H,), jnp.float64)
-    t_start = jnp.zeros((H,), jnp.float64)
+    t_avail = jnp.zeros(active.shape, jnp.float64)
+    t_start = jnp.zeros(active.shape, jnp.float64)
     if defer_on:
         # pre-occupancy arrival per hop: the moment the frame reaches the
         # port's queue, BEFORE waiting for the link to free — the time the
         # coalescing-cycle join test must use (a frame queued behind the
         # waking head is serviced after the release, but it joined before)
-        t_arr = jnp.zeros((H,), jnp.float64)
+        t_arr = jnp.zeros(active.shape, jnp.float64)
     delivery = t_inj
     for h in range(H):
-        ta = jnp.maximum(t_head, free[h])
-        _, _, _, _, tae, pen = _fsm(ta, dl[h], dl2[h],
-                                    defer_amt[h] if defer_on else 0.0)
+        ta = jnp.maximum(t_head, free[..., h])
+        _, _, _, _, tae, pen = _fsm(ta, dl[..., h], dl2[..., h],
+                                    defer_amt[..., h] if defer_on else 0.0)
         ts_ = tae + pen
         te_ = ts_ + t_ser
-        t_avail = t_avail.at[h].set(ta)
-        t_start = t_start.at[h].set(ts_)
+        t_avail = t_avail.at[..., h].set(ta)
+        t_start = t_start.at[..., h].set(ts_)
         if defer_on:
-            t_arr = t_arr.at[h].set(t_head)
-        t_head = jnp.where(active[h], ts_ + pm.switch_latency, t_head)
-        delivery = jnp.where(active[h], te_, delivery)
+            t_arr = t_arr.at[..., h].set(t_head)
+        t_head = jnp.where(active[..., h], ts_ + pm.switch_latency, t_head)
+        delivery = jnp.where(active[..., h], te_, delivery)
 
-    t_end = t_start + t_ser
+    t_end = t_start + t_ser[..., None]
     asleep, deep, in_down, in_down2, tae, _ = _fsm(
         t_avail, dl, dl2, defer_amt if defer_on else 0.0)
     gap = t_avail - last
@@ -202,8 +214,8 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     # sleeps at the row-1 floor and — past the demotion deadline and its
     # second down transition — at the row-2 floor (zero spans if the packet
     # lands during a down transition).
-    wake_fast = (dl - last) + t_s + t_w + t_ser
-    wake_deep = (dl - last) + t_s + t_s2 + t_w2 + t_ser
+    wake_fast = (dl - last) + t_s + t_w + t_ser[..., None]
+    wake_deep = (dl - last) + t_s + t_s2 + t_w2 + t_ser[..., None]
     wake_add = jnp.where(asleep,
                          jnp.where(deep, wake_deep, wake_fast),
                          jnp.maximum(new_last - last, 0.0))
@@ -214,18 +226,14 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     sleep2_add = jnp.where(deep & ~in_down2,
                            jnp.maximum(tae - (dl2 + t_s2), 0.0), 0.0)
     a = active.astype(jnp.float64)
-    net = dict(
-        net,
-        time_wake=net["time_wake"].at[lp].add(wake_add * a),
-        time_sleep=net["time_sleep"].at[lp].add(sleep_add * a),
-        time_sleep2=net["time_sleep2"].at[lp].add(sleep2_add * a),
-        n_wake=net["n_wake"].at[lp].add((asleep & active).astype(jnp.int64)),
-        n_miss=net["n_miss"].at[lp].add((asleep & active).astype(jnp.int64)),
-        n_hit=net["n_hit"].at[lp].add((~asleep & active).astype(jnp.int64)),
-        n_deep=net["n_deep"].at[lp].add((deep & active).astype(jnp.int64)),
-    )
 
-    # ---- coalescing-cycle bookkeeping -------------------------------------
+    out = dict(
+        active=active, a=a, asleep=asleep, deep=deep, gap=gap,
+        t_avail=t_avail, t_start=t_start, t_end=t_end, new_last=new_last,
+        wake_add=wake_add, sleep_add=sleep_add, sleep2_add=sleep2_add,
+        delivery=delivery,
+        lat=jnp.where(valid & (nhops > 0), delivery - t_inj, 0.0),
+    )
     if defer_on:
         # precoalesce: the cycle state advances only at the injection hop
         # (the at_src mask); downstream rows write their gathered values
@@ -234,24 +242,80 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
         join = active & at_src & ~asleep & (coal_n_g > 0) \
             & (t_arr <= coal_release_g)
         roll = jnp.where(coal_n_g > 0, coal_n_g, coal_prev_g)
-        net[ck[1]] = net[ck[1]].at[lp].set(
-            jnp.where(miss, roll, coal_prev_g))
-        net[ck[0]] = net[ck[0]].at[lp].set(
+        out["coal_new"] = (
             jnp.where(miss, 1.0,
-                      jnp.where(join, coal_n_g + 1.0, coal_n_g)))
-        net[ck[2]] = net[ck[2]].at[lp].set(
-            jnp.where(miss, t_start, coal_release_g))
+                      jnp.where(join, coal_n_g + 1.0, coal_n_g)),
+            jnp.where(miss, roll, coal_prev_g),
+            jnp.where(miss, t_start, coal_release_g),
+        )
+    return out
+
+
+def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
+                  params=None):
+    """Advance the net state by one message — or, when the message arrays
+    carry a leading batch axis (links ``(m, H)``, scalars ``(m,)``), by a
+    whole *wave* of link-disjoint messages at once.  Disjoint routes make
+    every gather read rows no other wave member writes and every scatter
+    land on distinct rows (the dummy row only ever absorbs masked no-op
+    writes), so the batched application is bit-identical to applying the
+    members serially in any order (DESIGN.md §10)."""
+    links, dirs, nhops, t_inj, nbytes, valid = msg
+    p = pb._params(policy, params)
+    t_s = p["t_s"]
+    coal = policy.kind == "coalesce"
+    pre = policy.kind == "precoalesce"
+    defer_on = coal or pre
+    active, lp, dp = _slot_rows(links, dirs, nhops, valid, n_links)
+
+    g = {
+        "free": net["dir_free"][dp],
+        "last": net["last_end"][lp],
+        "dl": net["deadline"][lp],
+        "dl2": net["deadline2"][lp],
+    }
+    tpdt_prev = net["pred"]["tpdt"][lp]
+    if defer_on:
+        ck = ("coal_n", "coal_prev", "coal_release") if coal \
+            else ("pre_n", "pre_prev", "pre_release")
+        g["coal"] = (net[ck[0]][lp], net[ck[1]][lp], net[ck[2]][lp])
+
+    ns = _slot_compute(g, msg, active, policy, pm, params)
+    a = ns["a"]
+    asleep, deep, gap = ns["asleep"], ns["deep"], ns["gap"]
+    t_avail, t_start, t_end = ns["t_avail"], ns["t_start"], ns["t_end"]
+    new_last, dl, dl2 = ns["new_last"], g["dl"], g["dl2"]
+
+    net = dict(
+        net,
+        time_wake=net["time_wake"].at[lp].add(ns["wake_add"] * a),
+        time_sleep=net["time_sleep"].at[lp].add(ns["sleep_add"] * a),
+        time_sleep2=net["time_sleep2"].at[lp].add(ns["sleep2_add"] * a),
+        n_wake=net["n_wake"].at[lp].add((asleep & active).astype(jnp.int64)),
+        n_miss=net["n_miss"].at[lp].add((asleep & active).astype(jnp.int64)),
+        n_hit=net["n_hit"].at[lp].add((~asleep & active).astype(jnp.int64)),
+        n_deep=net["n_deep"].at[lp].add((deep & active).astype(jnp.int64)),
+    )
+
+    # ---- coalescing-cycle bookkeeping -------------------------------------
+    if defer_on:
+        new_n, new_prev, new_release = ns["coal_new"]
+        net[ck[1]] = net[ck[1]].at[lp].set(new_prev)
+        net[ck[0]] = net[ck[0]].at[lp].set(new_n)
+        net[ck[2]] = net[ck[2]].at[lp].set(new_release)
 
     # ---- occupancy / transmission-end bookkeeping -------------------------
     net["dir_free"] = net["dir_free"].at[dp].add(
-        jnp.maximum(t_end - free, 0.0) * a)
-    net["last_end"] = net["last_end"].at[lp].add((new_last - last) * a)
+        jnp.maximum(t_end - g["free"], 0.0) * a)
+    net["last_end"] = net["last_end"].at[lp].add((new_last - g["last"]) * a)
 
     # ---- predictors --------------------------------------------------------
+    H = links.shape[-1]
     pred = net["pred"]
     if policy.adaptive or policy.record_hist:
         pred = pb.record_gaps(pred, lp, gap, t_avail, active, policy, p)
-        pred = pb.record_hops(pred, lp, nhops - jnp.arange(H), active, policy)
+        pred = pb.record_hops(pred, lp, nhops[..., None] - jnp.arange(H),
+                              active, policy)
     if policy.kind == "perfbound_correct":
         ratio = gap / jnp.maximum(tpdt_prev, 1e-12)
         pred = pb.record_outcomes(pred, lp, asleep, ratio, active, policy)
@@ -289,9 +353,30 @@ def _message_step(net, msg, policy: Policy, pm: PowerModel, n_links: int,
     # add would latch the row at NaN, silently disabling demotion forever
     net["deadline2"] = net["deadline2"].at[lp].set(new_dl2)
 
-    lat = jnp.where(valid & (nhops > 0), delivery - t_inj, 0.0)
     events = (lp, t_start, t_end, active)
-    return net, (delivery, lat, events)
+    return net, (ns["delivery"], ns["lat"], events)
+
+
+def chain_spec(policy: Policy):
+    """Row-state layout for the CHAINED wavefront executor (replay.py):
+    ``(f64 lp-keyed keys, i64 lp-keyed keys)`` — every per-link row array
+    the message phase reads or writes, excluding ``dir_free`` (dp-keyed,
+    threaded separately) and ``pred.tpdt`` (read-only for these kinds).
+
+    Returns ``None`` for the adaptive / histogram-recording kinds: their
+    predictor state (histogram matrices, ring buffers, shift registers) is
+    not threaded through the chain buffers, so those protos fall back to
+    the scatter-per-wave batched loop."""
+    if policy.adaptive or policy.record_hist:
+        return None
+    f64 = ["last_end", "deadline", "deadline2",
+           "time_wake", "time_sleep", "time_sleep2"]
+    if policy.kind == "coalesce":
+        f64 += ["coal_n", "coal_prev", "coal_release"]
+    if policy.kind == "precoalesce":
+        f64 += ["pre_n", "pre_prev", "pre_release"]
+    i64 = ["n_wake", "n_miss", "n_hit", "n_deep"]
+    return tuple(f64), tuple(i64)
 
 
 @lru_cache(maxsize=None)

@@ -182,13 +182,15 @@ def placement_cache_info() -> dict:
 
 @lru_cache(maxsize=None)
 def _sharded_runner(proto: Policy, pm: PowerModel, n_links: int, cap: int,
-                    mesh: Mesh):
+                    mesh: Mesh, mode: str = "scan",
+                    needs_sort: bool = True):
     """``_make_run`` vmapped over T and shard_mapped over the mesh — the
     same scan program as ``replay._multi_segment_runner``, tiled.  Every
     input/output is tile-local (``check_rep=False``: there is no
     replication to verify and no collective in the program).  Carry
     buffers donate, exactly like the single-device runners."""
-    run = replay._make_run(proto, pm, n_links, cap, collect_events=False)
+    run = replay._make_run(proto, pm, n_links, cap, collect_events=False,
+                           mode=mode, needs_sort=needs_sort)
     vrun = jax.vmap(run, in_axes=(0, None, 0, 0, 0, 0, 0))
     sm = shard_map(vrun, mesh=mesh,
                    in_specs=(SP_TB, SP_B, SP_TB, SP_TB, SP_TB, SP_T, SP_T),
@@ -234,7 +236,9 @@ def replay_plans_sharded(batch: PlanBatch, pols, pm: PowerModel,
     part_mask, seg_xs = _place_batch(batch, mesh, T_pad)
 
     for seg, xs in zip(batch.segments, seg_xs):
-        run = _sharded_runner(proto, pm, batch.n_links, seg.cap, mesh)
+        md, ns = replay._seg_flags(seg, proto)
+        run = _sharded_runner(proto, pm, batch.n_links, seg.cap, mesh,
+                              md, ns)
         carry, _ = run(carry[0], params, carry[1], carry[2], carry[3],
                        part_mask, xs)
     nets, ready, lat_sum, lat_max = carry

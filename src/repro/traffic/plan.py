@@ -132,10 +132,51 @@ class PlanSegment:
     xs: dict = field(repr=False)         # device arrays, leading dim S_pad
     host_has_msgs: np.ndarray = field(default=None, repr=False)  # (S_pad,)
     host_live: np.ndarray = field(default=None, repr=False)      # (S_pad,) i32
+    host_wave: np.ndarray = field(default=None, repr=False)      # (S_pad,) i32
 
     @property
     def s_pad(self) -> int:
         return int(self.xs["delta"].shape[-2])
+
+    @property
+    def needs_sort(self) -> bool:
+        """False when every step statically carries <=1 valid message: the
+        valid slots are a prefix, so the stable injection-time argsort is
+        the identity and the executor skips it (plan-time flag)."""
+        return self.host_live is None \
+            or int(self.host_live.max(initial=0)) > 1
+
+    @property
+    def wave_width(self) -> int:
+        """Plan-time wave-schedule width (DESIGN.md §10): the largest
+        canonical-order conflict-chain length over the segment's steps —
+        the wave count the executor's wavefront mode runs when injection
+        times tie (the common post-barrier case), and its mode heuristic's
+        estimate otherwise.  Segments without the analysis report ``cap``
+        (conservative: the serial trip count)."""
+        if self.host_wave is None:
+            return self.cap
+        return int(self.host_wave.max(initial=0))
+
+    @property
+    def mean_live(self) -> float:
+        """Mean live-message count over the segment's message steps — the
+        prefix executor's expected dynamic trip, vs the serial scan's
+        static ``cap`` (the executor cost model, DESIGN.md §10).  Stacked
+        (T, S) metadata averages over every trace row."""
+        if self.host_live is None:
+            return float(self.cap)
+        lv = self.host_live[self.host_live > 0]
+        return float(lv.mean()) if lv.size else 0.0
+
+    @property
+    def mean_wave(self) -> float:
+        """Mean canonical wave count over the segment's message steps —
+        the chained wave executor's expected trip."""
+        if self.host_wave is None:
+            return float(self.cap)
+        wv = self.host_wave[self.host_wave > 0]
+        return float(wv.mean()) if wv.size else 0.0
 
     def nbytes(self) -> int:
         """Device bytes held by this segment's arrays."""
@@ -158,8 +199,10 @@ def step_fixed_nbytes(n_nodes: int) -> int:
 def segment_nbytes(cap: int, s_pad: int, n_nodes: int, max_hops: int) -> int:
     """Byte model of a (cap, S_pad) segment — the packer's merge-cost
     metric and the memory audit's padded-bytes column.  Matches
-    ``PlanSegment.nbytes()`` for segments built by ``_stack_segment``."""
-    per_step = step_fixed_nbytes(n_nodes) + cap * slot_nbytes(max_hops)
+    ``PlanSegment.nbytes()`` for segments built by ``_stack_segment``
+    (capped segments also carry a 4-byte per-step live count)."""
+    per_step = step_fixed_nbytes(n_nodes) + cap * slot_nbytes(max_hops) \
+        + (4 if cap else 0)
     return s_pad * per_step
 
 
@@ -242,6 +285,57 @@ def _lower_steps(trace) -> List[_HostStep]:
 # ---------------------------------------------------------------------------
 
 
+def step_conflicts(links: np.ndarray, nhops: np.ndarray) -> np.ndarray:
+    """(M, M) bool conflict matrix of one step's messages: i conflicts j
+    iff their route link sets intersect (direction-agnostic — both
+    directions of a link share its FSM row).  Messages sharing a link form
+    a clique, so the matrix assembles per-link instead of via an O(M²H²)
+    pairwise compare.  Diagonal is False."""
+    M = links.shape[0]
+    conf = np.zeros((M, M), bool)
+    if M <= 1:
+        return conf
+    hop_ok = (links >= 0) & (np.arange(links.shape[1]) < nhops[:, None])
+    mi, hi = np.nonzero(hop_ok)
+    by_link: dict = {}
+    for i, l in zip(mi.tolist(), links[mi, hi].tolist()):
+        by_link.setdefault(l, []).append(i)
+    for idx in by_link.values():
+        if len(idx) > 1:
+            conf[np.ix_(idx, idx)] = True
+    np.fill_diagonal(conf, False)
+    return conf
+
+
+def wave_assign(conf: np.ndarray) -> np.ndarray:
+    """Order-preserving greedy wave ids (1-based) for a step's messages in
+    a fixed processing order: ``wave[i] = 1 + max(wave[j])`` over earlier
+    conflicting ``j`` (0 if none).  Conflicting pairs land in strictly
+    increasing waves matching the order, so executing wave-by-wave — each
+    wave's (link-disjoint) members batched — replays the exact serial
+    update sequence on every FSM row (DESIGN.md §10).  The executor runs
+    the same recurrence on device against each lane's injection-time sort;
+    this host twin (canonical slot order) feeds the plan-time width
+    estimate and the property tests."""
+    M = conf.shape[0]
+    wave = np.ones(M, np.int64)
+    for i in range(1, M):
+        pred = conf[i, :i]
+        if pred.any():
+            wave[i] = wave[:i][pred].max() + 1
+    return wave
+
+
+def _step_wave_width(links: np.ndarray, nhops: np.ndarray) -> int:
+    """Wave count of one step in canonical (slot) order — exact when
+    injection times tie (stable sort = identity), the mode heuristic's
+    estimate otherwise."""
+    M = links.shape[0]
+    if M <= 1:
+        return M
+    return int(wave_assign(step_conflicts(links, nhops)).max())
+
+
 def _stack_segment(steps: List[_HostStep], cap: int, n_nodes: int,
                    routed: dict, H: int, S_pad: int) -> PlanSegment:
     S = len(steps)
@@ -249,6 +343,7 @@ def _stack_segment(steps: List[_HostStep], cap: int, n_nodes: int,
     barrier = np.zeros((S_pad,), bool)
     has_msgs = np.zeros((S_pad,), bool)
     live = np.zeros((S_pad,), np.int32)
+    wave = np.zeros((S_pad,), np.int32)
     xs = {}
     if cap:
         src = np.zeros((S_pad, cap), np.int32)
@@ -277,16 +372,18 @@ def _stack_segment(steps: List[_HostStep], cap: int, n_nodes: int,
             dirs[i, :M] = d
             nhops[i, :M] = nh
             valid[i, :M] = True
+            wave[i] = _step_wave_width(np.asarray(l), np.asarray(nh))
     xs["delta"] = jnp.asarray(delta)
     xs["barrier"] = jnp.asarray(barrier)
     if cap:
         xs.update(
-            has_msgs=jnp.asarray(has_msgs), src=jnp.asarray(src),
+            has_msgs=jnp.asarray(has_msgs), live=jnp.asarray(live),
+            src=jnp.asarray(src),
             dst=jnp.asarray(dst), nbytes=jnp.asarray(nbytes),
             links=jnp.asarray(links), dirs=jnp.asarray(dirs),
             nhops=jnp.asarray(nhops), valid=jnp.asarray(valid))
     return PlanSegment(cap=cap, n_steps=S, xs=xs, host_has_msgs=has_msgs,
-                       host_live=live)
+                       host_live=live, host_wave=wave)
 
 
 def topo_signature(topo) -> tuple:
@@ -525,10 +622,14 @@ def stack_plans(plans: List[TracePlan], names: Optional[List[str]] = None
             if seg0.host_has_msgs is not None else None
         host_live = np.stack([p.segments[si].host_live for p in plans]) \
             if seg0.host_live is not None else None
+        host_wave = np.stack([p.segments[si].host_wave for p in plans]) \
+            if all(p.segments[si].host_wave is not None for p in plans) \
+            else None
         segments.append(PlanSegment(
             cap=seg0.cap,
             n_steps=max(p.segments[si].n_steps for p in plans),
-            xs=xs, host_has_msgs=host_has, host_live=host_live))
+            xs=xs, host_has_msgs=host_has, host_live=host_live,
+            host_wave=host_wave))
     return PlanBatch(
         n_nodes=plans[0].n_nodes, n_links=plans[0].n_links,
         max_hops=plans[0].max_hops,
@@ -565,6 +666,7 @@ def _seg_host_xs(seg: PlanSegment, cap: int, H: int) -> dict:
     if seg.cap == 0 and cap:
         out.update(
             has_msgs=np.zeros((S,), bool),
+            live=np.zeros((S,), np.int32),
             src=np.zeros((S, cap), np.int32),
             dst=np.zeros((S, cap), np.int32),
             nbytes=np.zeros((S, cap), np.float64),
@@ -600,8 +702,8 @@ def _apply_schedule(plan: TracePlan, schedule: List[tuple]) -> TracePlan:
         hxs = [{k: v[:keep] for k, v in _seg_host_xs(s, cap, H).items()}
                for s, (_, keep) in zip(segs, members)]
         keys = ["delta", "barrier"] + (
-            ["has_msgs", "src", "dst", "nbytes", "links", "dirs", "nhops",
-             "valid"] if cap else [])
+            ["has_msgs", "live", "src", "dst", "nbytes", "links", "dirs",
+             "nhops", "valid"] if cap else [])
         xs = {k: np.concatenate([h[k] for h in hxs]) for k in keys}
         S = xs["delta"].shape[0]
         for k in keys:
@@ -613,10 +715,17 @@ def _apply_schedule(plan: TracePlan, schedule: List[tuple]) -> TracePlan:
         host_live = _pad_axis(np.concatenate(
             [s.host_live[:keep]
              for s, (_, keep) in zip(segs, members)]), S_pad, 0)
+        # per-step wave widths ride along unchanged — repacking moves and
+        # trims padding slots, never the live message set of a step
+        host_wave = _pad_axis(np.concatenate(
+            [s.host_wave[:keep] if s.host_wave is not None
+             else np.zeros((keep,), np.int32)
+             for s, (_, keep) in zip(segs, members)]), S_pad, 0)
         segments.append(PlanSegment(
             cap=cap, n_steps=S,
             xs={k: jnp.asarray(v) for k, v in xs.items()},
-            host_has_msgs=host_has, host_live=host_live))
+            host_has_msgs=host_has, host_live=host_live,
+            host_wave=host_wave))
     return replace(plan, segments=segments)
 
 

@@ -258,3 +258,45 @@ def test_warm_replay_is_device_resident():
     assert cc.count == 0, "warm replay recompiled"
     t_end = float(out[1][0])                       # readback OUTSIDE guard
     assert t_end == warm_t_end > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Wave-schedule plan metadata (DESIGN.md §10) — the planner's contract with
+# the wavefront executors, over arbitrary phase-structured traces
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_plan_wave_metadata_contract(data):
+    """Every message segment carries live counts and wave widths that are
+    host twins of its device arrays: ``host_live`` == per-step valid
+    counts (shipped as ``xs["live"]`` for the prefix executor's trip
+    bound), ``host_wave`` == the width ``wave_assign`` derives from the
+    step's real routes, and the derived ``needs_sort`` / ``wave_width`` /
+    ``mean_live`` / ``mean_wave`` flags follow."""
+    topo = TOPOS["megafly"]
+    tr = data.draw(traces(topo.n_nodes))
+    plan = P.compile_plan(tr, topo)
+    assert any(s.cap for s in plan.segments)
+    for s in plan.segments:
+        if not s.cap:
+            assert s.needs_sort          # conservative default, never read
+            continue
+        valid = np.asarray(s.xs["valid"])
+        np.testing.assert_array_equal(s.host_live, valid.sum(axis=1))
+        np.testing.assert_array_equal(np.asarray(s.xs["live"]), s.host_live)
+        links, nhops = np.asarray(s.xs["links"]), np.asarray(s.xs["nhops"])
+        for i in range(valid.shape[0]):
+            m = int(s.host_live[i])
+            if m == 0:
+                assert s.host_wave[i] == 0
+                continue
+            conf = P.step_conflicts(links[i, :m], nhops[i, :m])
+            assert s.host_wave[i] == int(P.wave_assign(conf).max())
+            assert 1 <= s.host_wave[i] <= m
+        assert s.wave_width == int(s.host_wave.max(initial=0))
+        assert s.needs_sort == (int(s.host_live.max(initial=0)) > 1)
+        if s.host_live.max(initial=0) > 0:
+            assert 0.0 < s.mean_live <= s.cap
+            assert 1.0 <= s.mean_wave <= max(s.wave_width, 1)
