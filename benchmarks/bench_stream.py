@@ -1,0 +1,81 @@
+"""Streaming advisor throughput: the closed-loop windowed pipeline.
+
+Measures what the online advisor costs per window on top of a plain suite
+sweep: wall time for the full stream (pool seeding excluded — the tuner is
+benchmarked by ``bench_tuner``), windows/s, the switch count, and the
+stream's compile trajectory.  The warm-path contract is the headline
+number: within a stream only window 0 compiles, and the warm pass of the
+``BENCH_stream.json`` record (same drifts, resident window/plan caches)
+must compile ZERO programs — ``check_compiles.py`` guards that against
+``baselines/compile_counts.json`` ("stream": 0) in the stream-smoke CI
+job.
+
+Scales:
+  * tiny  — regimes + diurnal drifts, 6 windows x 8-node allocations on
+    the 12-node Megafly, fixed 3-candidate pool (CI smoke).
+  * small — all three catalog drifts, 12 windows x 16 nodes on the
+    80-node Megafly.
+  * paper — the catalog drifts at their full 24 windows, 64-node
+    allocations on the 4160-node Megafly.
+"""
+from __future__ import annotations
+
+from benchmarks.common import PM, Row, get_topo, timed
+from repro.core.eee import Policy
+from repro.streaming import advise_stream, get_drift
+
+# A fixed pool keeps the bench focused on the windowed pipeline (and its
+# compile counts deterministic): one aggressive deep sleeper, one mild
+# fast-waker, one two-stage policy — the regimes the drift catalog flips
+# between.
+POOL = {
+    "fixed-ds-1us": Policy(kind="fixed", t_pdt=1e-6,
+                           sleep_state="deep_sleep"),
+    "fixed-fw-100us": Policy(kind="fixed", t_pdt=1e-4,
+                             sleep_state="fast_wake"),
+    "dual-10us-200us": Policy(kind="dual", t_pdt=1e-5, t_dst=2e-4,
+                              sleep_state="fast_wake",
+                              deep_state="deep_sleep"),
+}
+
+
+def _setup(scale: str):
+    """(drifts, n_nodes, windows, budget_pct) per scale.
+
+    The budget tightens with scale: the aggressive sleeper's per-window
+    overhead shrinks on bigger topologies (more links amortize each wake),
+    so the budget that separates quiet-feasible from busy-infeasible —
+    the inversion the bench showcases — moves down (0.1 on the 12-node
+    tiny Megafly, 0.06 on the 80-node small one; see DESIGN.md §11)."""
+    if scale == "tiny":
+        return ["drift-dc-regimes", "drift-dc-diurnal"], 8, 6, 0.1
+    if scale == "paper":
+        return ["drift-dc-regimes", "drift-dc-diurnal",
+                "drift-dc-flash"], 64, None, 0.06
+    return (["drift-dc-regimes", "drift-dc-diurnal", "drift-dc-flash"],
+            16, 12, 0.06)
+
+
+def n_policies(scale: str) -> int:
+    return len(POOL)
+
+
+def run(scale: str):
+    topo = get_topo(scale)
+    names, n_nodes, windows, budget = _setup(scale)
+    rows = []
+    for name in names:
+        spec = get_drift(name).scaled(n_nodes=n_nodes, windows=windows)
+        out, us = timed(advise_stream, spec, topo, pool=POOL,
+                        budget_pct=budget, pm=PM)
+        compiles = [r["compiles"] for r in out["timeline"]]
+        t = out["totals"]
+        rows.append(Row(
+            f"stream/{name}", us,
+            f"{spec.windows}w_{spec.windows / (us / 1e6):.2f}w_per_s_"
+            f"switches{out['switches']}_"
+            f"onlinesaved{t['online_saved_pct']:.2f}pct_"
+            f"staticsaved{t['best_static_saved_pct']:.2f}pct_"
+            f"gain{t['gain_vs_static_pct']:.2f}pct_"
+            f"compiles{compiles[0]}-then-{max(compiles[1:], default=0)}"))
+    return rows

@@ -35,6 +35,7 @@ MODULES = [
     ("tuner", "benchmarks.bench_tuner"),                   # beyond paper
     ("sharded_sweep", "benchmarks.bench_sharded_sweep"),   # beyond paper
     ("wavefront", "benchmarks.bench_wavefront"),           # DESIGN.md §10
+    ("stream", "benchmarks.bench_stream"),                 # DESIGN.md §11
 ]
 
 

@@ -84,35 +84,54 @@ def llm_trace_from_cell(rec: dict, topo: Megafly, *, n_steps: int = 3,
     flops = rec["cost"].get("flops", 0.0)
     step_secs = flops / (PEAK_FLOPS * mfu) if flops else 1e-3
 
-    tp_groups = [nodes[i:i + tp_degree]
-                 for i in range(0, n_dev, tp_degree)]
-    dp_groups = [nodes[r::tp_degree] for r in range(tp_degree)]
+    # Small cells: a TP group can never outgrow the cell.  Without the
+    # clamp an 8-device cell with the default tp_degree=16 builds strided
+    # dp_groups where ranks >= n_dev are EMPTY arrays (and TP allreduce
+    # rounds over a non-power-of-two remainder), so clamp to the largest
+    # power of two that fits and let the existing len>=2 guard skip the
+    # DP phase when the cell has no data-parallel replication at all.
+    eff_tp = min(tp_degree, n_dev)
+    eff_tp = 1 << (eff_tp.bit_length() - 1)      # collectives need 2**k
+    tp_groups = [nodes[i:i + eff_tp]
+                 for i in range(0, n_dev, eff_tp)]
+    dp_groups = [nodes[r::eff_tp] for r in range(eff_tp)]
     per_layer = max(int(tp_bytes / max(layers, 1)), 1)
 
     t = Trace(nodes=nodes, name=f"llm/{rec['arch']}/{rec['shape']}")
+    tp_rounds = _merged_allreduce(tp_groups, per_layer)
+    dp_rounds = _merged_allreduce(dp_groups, max(int(dp_bytes), 1))
     for _ in range(n_steps):
         comp = step_secs / max(layers, 1)
         for _l in range(layers):
             t.compute(comp)
-            if tp_bytes > 0:
-                rounds = []
-                for g in tp_groups:
-                    rounds_g = C.allreduce(g, per_layer)
-                    rounds = rounds_g if not rounds else [
-                        np.concatenate([a, b]) for a, b in
-                        zip(rounds, rounds_g)]
-                t.rounds(rounds)
-        if dp_bytes > 0 and len(dp_groups[0]) >= 2:
-            rounds = []
-            for g in dp_groups:
-                rounds_g = C.allreduce(g, max(int(dp_bytes), 1))
-                rounds = rounds_g if not rounds else [
-                    np.concatenate([a, b]) for a, b in
-                    zip(rounds, rounds_g)]
-            t.rounds(rounds, barrier_last=True)
+            if tp_bytes > 0 and tp_rounds:
+                t.rounds(tp_rounds)
+        if dp_bytes > 0 and dp_rounds:
+            t.rounds(dp_rounds, barrier_last=True)
         else:
             t.barrier()
     return t
+
+
+def _merged_allreduce(groups, nbytes: int) -> list:
+    """Ring-allreduce rounds over ``groups``, merged round-by-round so the
+    groups run in parallel.  Degenerate groups — empty, singleton, or a
+    non-power-of-two remainder the ring collective cannot express — are
+    dropped instead of being handed to ``collectives.allreduce`` (which
+    asserts 2**k participants), and ragged round counts are merged with
+    ``zip_longest`` so a short remainder group never silently truncates
+    the longer groups' rounds."""
+    import itertools
+    per = [C.allreduce(np.asarray(g), nbytes) for g in groups
+           if len(g) >= 2 and (len(g) & (len(g) - 1)) == 0]
+    if not per:
+        return []
+    merged = []
+    for ring in itertools.zip_longest(*per):
+        live = [r for r in ring if r is not None]
+        merged.append(live[0] if len(live) == 1
+                      else np.concatenate(live))
+    return merged
 
 
 DEFAULT_POLICIES = {
@@ -171,6 +190,59 @@ def advise_scenario(scenario: str, *, budget_pct: float = 1.0,
     }
 
 
+def advise_stream(drift: str, *, budget_pct: float = 0.1,
+                  topo=None, n_nodes: int | None = None,
+                  windows: int | None = None, seed: int | None = None,
+                  pool=None, pool_size: int = 6, pool_rounds: int = 2,
+                  margin_pct: float = 5.0, min_dwell: int = 2,
+                  objective: str = "link_energy",
+                  pm: PowerModel | None = None, **kw) -> dict:
+    """Run the closed-loop streaming advisor on a named drift stream.
+
+    The live-traffic front door (DESIGN.md §11): where ``advise_scenario``
+    answers "my traffic looks like dc-onoff" ONCE, this follows a DRIFTING
+    arrival process (``repro.streaming.drift`` catalog: diurnal sine,
+    flash crowds, regime switching) window by window, racing the incumbent
+    against a tuned challenger pool and switching with hysteresis under
+    the degradation budget.  Returns the ``repro.streaming.advise_stream``
+    report — per-window timeline plus online-vs-best-static totals.
+    """
+    from repro.streaming import advise_stream as _advise_stream
+    from repro.streaming import get_drift
+    spec = get_drift(drift).scaled(n_nodes=n_nodes, windows=windows,
+                                   seed=seed)
+    topo = topo if topo is not None else small_topology()
+    return _advise_stream(spec, topo, budget_pct=budget_pct, pool=pool,
+                          pool_size=pool_size, pool_rounds=pool_rounds,
+                          margin_pct=margin_pct, min_dwell=min_dwell,
+                          objective=objective, pm=pm, **kw)
+
+
+def print_stream_report(out: dict) -> None:
+    """Render an ``advise_stream`` report as the CLI/experiment table."""
+    print(f"stream: {out['stream']} ({out['drift']}, "
+          f"{out['windows']} windows)  budget <= "
+          f"{out['budget_pct']:g}% overhead  objective={out['objective']}")
+    print(f"pool: {', '.join(out['pool'])}")
+    print(f"  {'w':>3s} {'rate/s':>8s} {'incumbent':28s} {'ovh%':>7s} "
+          f"{'saved%':>7s} {'compiles':>8s}  switch")
+    for r in out["timeline"]:
+        sw = f"-> {r['next_incumbent']} ({r['reason']})" \
+            if r["switched"] else ""
+        print(f"  {r['window']:3d} {r['rate']:8.0f} {r['incumbent']:28s} "
+              f"{r['overhead_pct']:7.3f} {r['saved_pct']:7.2f} "
+              f"{r['compiles']:8d}  {sw}")
+    t = out["totals"]
+    print(f"switches: {out['switches']}   final incumbent: "
+          f"{out['final_incumbent']}")
+    print(f"online:      saved={t['online_saved_pct']:6.2f}%  "
+          f"ovh={t['online_overhead_pct']:.3f}%")
+    print(f"best static: saved={t['best_static_saved_pct']:6.2f}%  "
+          f"({t['best_static']})")
+    print(f"gain vs best-static-in-hindsight: "
+          f"{t['gain_vs_static_pct']:.2f}%")
+
+
 def advise(arch: str, shape: str, mesh: str = "16x16", *,
            policies: dict | None = None, n_steps: int = 3,
            mfu: float = 0.4, max_overhead_pct: float = 1.0,
@@ -178,12 +250,15 @@ def advise(arch: str, shape: str, mesh: str = "16x16", *,
            dryrun_dir=DRYRUN_DIR) -> dict:
     """Evaluate policies for a dry-run cell.  Returns
     {'cell', 'table', 'recommended'} — recommended = most total energy
-    saved subject to exec overhead <= max_overhead_pct."""
+    saved subject to exec overhead <= max_overhead_pct; when no policy
+    fits the budget the recommendation falls back to the always-on
+    ``"baseline"`` row (0% overhead, 0% saved), mirroring
+    ``frontier.budget_winner`` — the advisor never answers None."""
     rec = load_cell(arch, shape, mesh, dryrun_dir)
     topo = topo or paper_topology()
     trace = llm_trace_from_cell(rec, topo, n_steps=n_steps, mfu=mfu)
     table = compare_policies(trace, topo, policies or DEFAULT_POLICIES, pm)
-    best, best_saved = None, -np.inf
+    best, best_saved = "baseline", 0.0
     for name, row in table.items():
         if name == "baseline":
             continue
@@ -207,21 +282,45 @@ def main():
                     help="catalog mode: tune for a named workload class "
                          "(repro.scenarios catalog) instead of a dry-run "
                          "cell")
-    ap.add_argument("--budget", type=float, default=1.0, metavar="PCT",
-                    help="scenario mode: max exec overhead in percent")
+    ap.add_argument("--stream", default=None, metavar="DRIFT",
+                    help="streaming mode: follow a named drifting stream "
+                         "(repro.streaming drift catalog) with the "
+                         "closed-loop online advisor")
+    ap.add_argument("--budget", type=float, default=None, metavar="PCT",
+                    help="scenario/stream mode: max exec overhead in "
+                         "percent (default 1.0 scenario, 0.1 stream)")
     ap.add_argument("--rounds", type=int, default=3,
                     help="scenario mode: tuner search rounds")
+    ap.add_argument("--windows", type=int, default=None,
+                    help="stream mode: override the drift's window count")
+    ap.add_argument("--n-nodes", type=int, default=None,
+                    help="scenario/stream mode: allocation size")
+    ap.add_argument("--small-topo", action="store_true",
+                    help="stream mode: tiny 12-node Megafly (CI smoke)")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--steps", type=int, default=3)
     ap.add_argument("--max-overhead-pct", type=float, default=1.0)
     args = ap.parse_args()
-    if (args.arch is None) == (args.scenario is None):
-        ap.error("pass exactly one of --arch (dry-run cell) or "
-                 "--scenario (catalog workload)")
+    modes = [m for m in (args.arch, args.scenario, args.stream)
+             if m is not None]
+    if len(modes) != 1:
+        ap.error("pass exactly one of --arch (dry-run cell), --scenario "
+                 "(catalog workload) or --stream (drifting stream)")
+    if args.stream:
+        topo = small_topology(n_groups=3, leaves=2, spines=2,
+                              nodes_per_leaf=2) if args.small_topo else None
+        out = advise_stream(
+            args.stream,
+            budget_pct=0.1 if args.budget is None else args.budget,
+            topo=topo, n_nodes=args.n_nodes, windows=args.windows)
+        print_stream_report(out)
+        return
     if args.scenario:
-        out = advise_scenario(args.scenario, budget_pct=args.budget,
-                              rounds=args.rounds)
+        out = advise_scenario(args.scenario,
+                              budget_pct=1.0 if args.budget is None
+                              else args.budget,
+                              rounds=args.rounds, n_nodes=args.n_nodes)
         print(f"scenario: {out['scenario']}  "
               f"budget <= {out['budget_pct']:g}% overhead")
         for p in out["frontier"]:

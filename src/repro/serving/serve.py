@@ -28,9 +28,22 @@ def generate(params, cfg, prompt, steps, cache_len=None):
     """Eager helper for examples/tests: prefill a prompt then greedy-decode.
 
     prompt: (B, S) int32.  Returns (B, steps) generated tokens.
+
+    ``cache_len`` pre-sizes the linear KV caches (sequence axis) instead
+    of the default tight fit of ``S + steps`` — serving stacks allocate
+    one bucketed cache length and reuse it across requests, so the
+    decode-step program is compiled once per bucket rather than once per
+    (prompt, steps) pair.  Must fit the whole generation; the extra slots
+    are bit-inert (attention masks positions past the write cursor).
     """
     B, S = prompt.shape
     max_len = S + steps
+    if cache_len is None:
+        cache_len = max_len
+    if cache_len < max_len:
+        raise ValueError(
+            f"cache_len={cache_len} cannot hold prompt ({S}) + "
+            f"generated ({steps}) tokens; need >= {max_len}")
     batch = {"tokens": prompt}
     if cfg.family == "vlm":
         batch["patch_embeds"] = jnp.zeros((B, cfg.num_patches, cfg.d_model),
@@ -39,12 +52,12 @@ def generate(params, cfg, prompt, steps, cache_len=None):
         batch["frames"] = jnp.zeros((B, S, cfg.d_model), cfg.dtype)
     out = M.forward(params, batch, cfg, mode="prefill")
     cache = out["cache"]
-    # grow linear caches to fit the generation
+    # grow linear caches to the requested bucket (>= prefill S + steps)
     def grow(path, x):
         name = path[-1].key if hasattr(path[-1], "key") else ""
         if name in ("k", "v", "k_global", "v_global"):
             pad = [(0, 0)] * x.ndim
-            pad[2] = (0, steps)
+            pad[2] = (0, cache_len - x.shape[2])
             return jnp.pad(x, pad)
         return x
     cache = jax.tree_util.tree_map_with_path(grow, cache)

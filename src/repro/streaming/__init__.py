@@ -1,0 +1,36 @@
+"""Streaming power advisor: closed-loop policy switching under traffic drift.
+
+The paper's critique of dynamic power-down is that reactive mechanisms are
+caught out when the workload drifts; the related EEE literature (Cenedese
+et al. arXiv:1503.02843, Rodríguez-Pérez et al. arXiv:1507.07411) shows
+the controller must re-evaluate as the arrival process changes.  This
+package closes that loop (DESIGN.md §11):
+
+* ``repro.streaming.drift`` — time-varying stochastic scenarios (diurnal
+  sine rates, flash-crowd spikes, regime-switching ON-OFF) emitted as a
+  sequence of fixed-shape windows sharing ONE compiled plan shape;
+* ``repro.streaming.controller`` — the pure hysteresis switching rule
+  (min-dwell + margin over smoothed windowed objectives), property-tested
+  like ``repro.tuning.frontier``;
+* ``repro.streaming.online`` — the online advisor loop: each window is
+  lowered to a plan and replayed against the incumbent policy plus a
+  tuned challenger pool on the existing ``stack_plans``/``sweep_cells``
+  compiled path, with a warm-path guarantee that window re-advice after
+  the first window compiles ZERO programs.
+
+Front door: ``launch.power_advisor.advise_stream`` (and the ``--stream``
+CLI mode).
+"""
+from repro.streaming.controller import (ControllerState, SwitchConfig,
+                                        decide)
+from repro.streaming.drift import (DRIFT_CATALOG, DriftSpec, get_drift,
+                                   list_drifts, regime_path, window_rates,
+                                   window_trace)
+from repro.streaming.online import advise_stream, challenger_pool
+
+__all__ = [
+    "ControllerState", "SwitchConfig", "decide",
+    "DRIFT_CATALOG", "DriftSpec", "get_drift", "list_drifts",
+    "regime_path", "window_rates", "window_trace",
+    "advise_stream", "challenger_pool",
+]

@@ -1,0 +1,98 @@
+"""The switching controller: hysteresis over smoothed windowed objectives.
+
+Pure plain-Python decision logic, like ``repro.tuning.frontier`` — no JAX,
+no simulation — so the hysteresis rule is directly property-testable
+(``tests/test_streaming.py`` drives it with hypothesis): under stationary
+scores the incumbent never flaps, the switch count is bounded by the
+number of times the (smoothed) winner actually changes, and a switch never
+targets a candidate over the degradation budget.
+
+The rule (DESIGN.md §11): per window each candidate's windowed objective
+(energy) and degradation are folded into exponential moving averages;
+a challenger replaces the incumbent only when
+
+* the incumbent has dwelt at least ``min_dwell`` windows since the last
+  switch (hysteresis against regime-boundary chatter), AND
+* the best budget-feasible challenger's smoothed energy beats the
+  incumbent's by at least ``margin_pct`` percent — or the incumbent
+  itself has drifted out of the budget (feasibility overrides the margin:
+  staying put would violate the degradation contract).
+
+The always-on baseline lane reports ~0 degradation by construction, so a
+feasible fallback always exists — the streaming analogue of
+``frontier.budget_winner``'s baseline fallback.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+WindowScores = Dict[str, Tuple[float, float]]   # name -> (degradation%, energy)
+
+
+@dataclass(frozen=True)
+class SwitchConfig:
+    """Hysteresis knobs of the streaming advisor."""
+    budget_pct: float = 1.0     # max smoothed exec overhead vs baseline, %
+    margin_pct: float = 5.0     # challenger must beat incumbent energy by
+    min_dwell: int = 2          # windows between switches
+    smooth: float = 0.5         # EWMA weight of the newest window (1 = raw)
+
+    def __post_init__(self):
+        assert self.budget_pct >= 0 and self.margin_pct >= 0
+        assert self.min_dwell >= 1 and 0 < self.smooth <= 1
+
+
+@dataclass
+class ControllerState:
+    """Mutable-through-``decide`` controller state (one per stream)."""
+    incumbent: str
+    dwell: int = 0               # windows since the last switch
+    switches: int = 0
+    ewma: Dict[str, Tuple[float, float]] = field(default_factory=dict)
+
+    def feasible(self, budget_pct: float) -> Dict[str, float]:
+        """{name: smoothed energy} of budget-respecting candidates."""
+        return {n: e for n, (d, e) in self.ewma.items() if d <= budget_pct}
+
+
+def _smooth(state: ControllerState, scores: WindowScores, alpha: float):
+    for name, (d, e) in scores.items():
+        pd, pe = state.ewma.get(name, (d, e))
+        state.ewma[name] = (alpha * d + (1 - alpha) * pd,
+                            alpha * e + (1 - alpha) * pe)
+
+
+def decide(state: ControllerState, scores: WindowScores,
+           cfg: SwitchConfig) -> Tuple[ControllerState, bool, str]:
+    """Fold one window's scores into ``state`` and decide the NEXT window's
+    incumbent.  Returns ``(state, switched, reason)``; ``state`` is the
+    same object, updated in place (EWMAs, dwell, switch count).
+
+    ``scores`` maps each candidate (incumbent + challengers + baseline) to
+    its ``(degradation_pct, energy)`` on the window just replayed —
+    degradation vs the window's own always-on baseline, energy the
+    windowed objective (lower is better).
+    """
+    assert state.incumbent in scores, \
+        f"incumbent {state.incumbent!r} missing from window scores"
+    _smooth(state, scores, cfg.smooth)
+    state.dwell += 1
+
+    feasible = state.feasible(cfg.budget_pct)
+    inc_d, inc_e = state.ewma[state.incumbent]
+    inc_feasible = state.incumbent in feasible
+    if not feasible or state.dwell < cfg.min_dwell:
+        return state, False, "dwell" if feasible else "no-feasible"
+
+    best = min(feasible, key=lambda n: (feasible[n], n))
+    if best == state.incumbent:
+        return state, False, "incumbent-best"
+    if inc_feasible and feasible[best] > inc_e * (1 - cfg.margin_pct / 100):
+        return state, False, "margin"
+
+    reason = "over-budget" if not inc_feasible else "margin-beaten"
+    state.incumbent = best
+    state.dwell = 0
+    state.switches += 1
+    return state, True, reason

@@ -1,0 +1,276 @@
+"""Drifting arrival synthesis: time-varying stochastic scenario variants.
+
+A :class:`DriftSpec` describes a STREAM — a sequence of ``windows`` advisor
+windows, each ``steps`` service sub-windows of ``window_secs`` — whose
+arrival rate drifts over time:
+
+* ``diurnal``  — a sine-modulated Poisson rate (the day/night serving
+  cycle that invalidates yesterday's thresholds);
+* ``flash``    — a base trickle with multiplicative flash-crowd spikes at
+  seeded random times;
+* ``regimes``  — a two-state Markov chain over (quiet, busy) rates that
+  switches at window boundaries, the regime-switching ON-OFF process of
+  the EEE prediction literature (arXiv:1503.02843).
+
+Every window lowers to the SAME compiled plan shape by construction —
+the dc-* invariant extended over time: per sub-window exactly one compute
+step (seeded jitter) and one message step whose flow count is clipped to
+``[2, max_flows]`` with ``max_flows <= 64`` (one message bucket; the floor
+of 2 keeps the executor's ``needs_sort`` flag, and with it the program
+key, traffic-independent).  The streaming advisor therefore replays every
+window of a stream — and every policy lane — through ONE compiled program
+per static policy group (``plan.stack_plans`` / ``sweep.sweep_cells``),
+compiling only on the first window.
+
+All sampling happens at synthesis time on counter-based Philox streams
+derived from ``(seed, window)``, so any window can be re-synthesized
+bit-identically without replaying the stream prefix — the warm-path and
+oracle (best-static-in-hindsight) evaluations depend on that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+from repro.scenarios.spec import params_of
+from repro.scenarios.stochastic import _flow_sizes, _pairs
+from repro.traffic.generators import allocate
+from repro.traffic.trace import Trace
+
+DRIFT_KINDS = ("diurnal", "flash", "regimes")
+
+# Philox stream tags: rate/regime path vs per-window flow sampling.
+_TAG_PATH = 0xD21F7
+_TAG_WINDOW = 0x51A7E
+
+
+def _rng(*key) -> np.random.Generator:
+    """Counter-based Philox keyed on an int tuple (via SeedSequence) —
+    platform-stable, and independent per (seed, window) so any window
+    re-synthesizes bit-identically without replaying the stream prefix."""
+    return np.random.Generator(np.random.Philox([int(k) for k in key]))
+
+
+@dataclass(frozen=True)
+class DriftSpec:
+    """One named drifting workload stream (a drift-catalog entry).
+
+    ``windows`` advisor windows x ``steps`` service sub-windows; the
+    switching controller makes one decision per window.  ``params`` holds
+    the drift-kind knobs as sorted (key, value) pairs (``params_of``).
+    """
+    name: str
+    drift: str                    # diurnal | flash | regimes
+    n_nodes: int = 16
+    seed: int = 0
+    windows: int = 24             # advisor windows (controller decisions)
+    steps: int = 8                # service sub-windows per advisor window
+    window_secs: float = 5e-3     # compute advance per sub-window
+    mean_bytes: int = 32 << 10
+    max_flows: int = 64           # one-bucket plan-shape guarantee
+    jitter: float = 0.5
+    mapping: str = "linear"
+    family: str = "dc"            # catalog family the challenger pool taps
+    params: tuple = ()            # drift knobs, see params_of
+    description: str = ""
+
+    def __post_init__(self):
+        if self.drift not in DRIFT_KINDS:
+            raise ValueError(f"drift kind {self.drift!r} not in "
+                             f"{DRIFT_KINDS}")
+        if self.n_nodes < 2 or self.windows < 1 or self.steps < 1:
+            raise ValueError(f"degenerate drift spec: n_nodes="
+                             f"{self.n_nodes} windows={self.windows} "
+                             f"steps={self.steps}")
+        if not 2 <= self.max_flows <= 64:
+            raise ValueError(f"max_flows must be in [2, 64] (one message "
+                             f"bucket), got {self.max_flows}")
+
+    def opt(self, key: str, default):
+        return dict(self.params).get(key, default)
+
+    def scaled(self, n_nodes: int | None = None, windows: int | None = None,
+               seed: int | None = None) -> "DriftSpec":
+        """The same stream on a different allocation / length / seed."""
+        return dataclasses.replace(
+            self,
+            n_nodes=self.n_nodes if n_nodes is None else n_nodes,
+            windows=self.windows if windows is None else windows,
+            seed=self.seed if seed is None else seed)
+
+
+# ---------------------------------------------------------------------------
+# Rate paths
+# ---------------------------------------------------------------------------
+
+
+def _rates_diurnal(spec: DriftSpec) -> np.ndarray:
+    base = spec.opt("base_rate", 2000.0)
+    amp = spec.opt("amp", 0.9)
+    period = spec.opt("period", 12.0)          # in advisor windows
+    g = np.arange(spec.windows * spec.steps, dtype=np.float64)
+    phase = 2 * np.pi * g / (period * spec.steps)
+    # open at the trough: the stream starts in the quiet night phase
+    rate = base * (1 + amp * np.sin(phase - np.pi / 2))
+    return np.maximum(rate, spec.opt("floor", 1.0))
+
+
+def _rates_flash(spec: DriftSpec) -> np.ndarray:
+    base = spec.opt("base_rate", 400.0)
+    mult = spec.opt("spike_mult", 12.0)
+    spike_every = spec.opt("spike_every", 6.0)  # mean windows between spikes
+    spike_len = int(spec.opt("spike_len", spec.steps))   # sub-windows
+    n = spec.windows * spec.steps
+    r = _rng(spec.seed, _TAG_PATH)
+    p = 1.0 / max(spike_every * spec.steps, 1.0)
+    starts = r.random(n) < p
+    spike = np.zeros(n, bool)
+    for i in np.nonzero(starts)[0]:
+        spike[i:i + spike_len] = True
+    return np.where(spike, base * mult, base)
+
+
+def _rates_regimes(spec: DriftSpec) -> np.ndarray:
+    lo = spec.opt("rate_lo", 120.0)
+    hi = spec.opt("rate_hi", 6000.0)
+    path = regime_path(spec)
+    per_window = np.where(path, hi, lo)
+    return np.repeat(per_window, spec.steps).astype(np.float64)
+
+
+def regime_path(spec: DriftSpec) -> np.ndarray:
+    """(windows,) bool busy-regime path of a ``regimes`` drift — aligned to
+    advisor-window boundaries, so hysteresis tests can bound the switch
+    count by the number of regime changes.  Non-regime drifts report the
+    per-window above-median mask (a coarse busy indicator)."""
+    if spec.drift != "regimes":
+        rates = window_rates(spec).mean(axis=1)
+        return rates > np.median(rates)
+    p_stay = spec.opt("p_stay", 0.85)
+    p_busy0 = spec.opt("p_busy0", 0.0)
+    r = _rng(spec.seed, _TAG_PATH)
+    path = np.zeros(spec.windows, bool)
+    busy = bool(r.random() < p_busy0)
+    for w in range(spec.windows):
+        path[w] = busy
+        busy = bool(r.random() < (p_stay if busy else 1 - p_stay))
+    return path
+
+
+_RATE_FNS = {"diurnal": _rates_diurnal, "flash": _rates_flash,
+             "regimes": _rates_regimes}
+
+
+def window_rates(spec: DriftSpec) -> np.ndarray:
+    """(windows, steps) per-sub-window arrival rates (flows/s) — a pure
+    deterministic function of the spec, shared by synthesis, the timeline
+    report and the drift tests."""
+    rates = _RATE_FNS[spec.drift](spec)
+    return rates.reshape(spec.windows, spec.steps)
+
+
+# ---------------------------------------------------------------------------
+# Window synthesis
+# ---------------------------------------------------------------------------
+
+# (spec, topo, window) -> Trace.  Identity-stable window traces keep the
+# per-(trace, topo) plan cache hot: warm stream re-advice hits resident
+# device plans and moves zero host bytes.
+_WINDOW_CACHE: OrderedDict = OrderedDict()
+_WINDOW_CACHE_MAX = 256
+
+
+def window_trace(spec: DriftSpec, topo, w: int) -> Trace:
+    """Synthesize (or fetch the cached) Trace of advisor window ``w``.
+
+    Structure per sub-window: one jittered compute step then one message
+    step of ``clip(Poisson(rate x window_secs), 2, max_flows)`` flows
+    between uniform src != dst pairs with heavy-tailed sizes; barrier on
+    the window's last sub-window (windows end synchronized, so each
+    replays from clean clocks exactly like a standalone trace).
+    """
+    if not 0 <= w < spec.windows:
+        raise IndexError(f"window {w} outside stream [0, {spec.windows})")
+    key = (spec, topo, w)
+    hit = _WINDOW_CACHE.get(key)
+    if hit is not None:
+        _WINDOW_CACHE.move_to_end(key)
+        return hit
+    rates = window_rates(spec)[w]
+    nodes = allocate(topo, spec.n_nodes, spec.mapping, spec.seed)
+    r = _rng(spec.seed, _TAG_WINDOW, w)
+    t = Trace(nodes=nodes, name=f"{spec.name}/w{w:04d}")
+    for k in range(spec.steps):
+        t.compute(r.uniform(1 - spec.jitter, 1 + spec.jitter, spec.n_nodes)
+                  * spec.window_secs)
+        # floor of 2 live flows: keeps every window's needs_sort flag (and
+        # with it the compiled program key) independent of the drawn rates
+        m = int(np.clip(r.poisson(rates[k] * spec.window_secs), 2,
+                        spec.max_flows))
+        src, dst = _pairs(r, nodes, m)
+        t.messages(np.stack([src, dst, _flow_sizes(r, m, spec.mean_bytes)],
+                            axis=1), barrier=k == spec.steps - 1)
+    _WINDOW_CACHE[key] = t
+    while len(_WINDOW_CACHE) > _WINDOW_CACHE_MAX:
+        _WINDOW_CACHE.popitem(last=False)
+    return t
+
+
+def window_cache_clear() -> None:
+    _WINDOW_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Drift catalog
+# ---------------------------------------------------------------------------
+
+_DRIFTS: Dict[str, DriftSpec] = {}
+
+
+def register_drift(spec: DriftSpec) -> DriftSpec:
+    assert spec.name not in _DRIFTS, f"duplicate drift {spec.name!r}"
+    _DRIFTS[spec.name] = spec
+    return spec
+
+
+def get_drift(name: str) -> DriftSpec:
+    if name not in _DRIFTS:
+        raise KeyError(f"unknown drift {name!r}; have {sorted(_DRIFTS)}")
+    return _DRIFTS[name]
+
+
+def list_drifts() -> list:
+    return sorted(_DRIFTS)
+
+
+DRIFT_CATALOG = [
+    DriftSpec(
+        "drift-dc-diurnal", "diurnal", seed=51,
+        params=params_of(base_rate=2200.0, amp=0.95, period=12.0),
+        description="day/night sine rate over two full periods: quiet "
+                    "troughs reward aggressive sleeping that the busy "
+                    "crest punishes"),
+    DriftSpec(
+        "drift-dc-flash", "flash", seed=52,
+        # spike_len=24 sub-windows = 3 advisor windows: flash crowds are
+        # SUSTAINED bursts, so hysteresis can ride out windows 2..3 of
+        # each burst on the mild policy after paying for window 1
+        params=params_of(base_rate=300.0, spike_mult=20.0, spike_every=8.0,
+                         spike_len=24.0),
+        description="near-idle trickle with seeded multi-window flash-"
+                    "crowd bursts — the sudden-invalidation case for "
+                    "tuned thresholds"),
+    DriftSpec(
+        "drift-dc-regimes", "regimes", seed=53,
+        params=params_of(rate_lo=120.0, rate_hi=6000.0, p_stay=0.85),
+        description="two-state Markov regime switching between a quiet "
+                    "trickle and near-saturation bursts, aligned to "
+                    "advisor windows"),
+]
+
+for _d in DRIFT_CATALOG:
+    register_drift(_d)

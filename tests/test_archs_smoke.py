@@ -153,6 +153,22 @@ def test_generate_runs(arch):
     assert int(toks.max()) < cfg.padded_vocab
 
 
+def test_generate_honors_cache_len():
+    """``cache_len`` pre-sizes the KV cache bucket: a bigger bucket is
+    bit-inert (attention masks the unwritten tail) and a bucket too small
+    for the generation is rejected instead of silently ignored."""
+    cfg = get_config("qwen2-1.5b").smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.asarray(
+        np.random.default_rng(4).integers(0, cfg.vocab_size, (1, 8)),
+        jnp.int32)
+    tight = generate(params, cfg, prompt, steps=4)
+    bucketed = generate(params, cfg, prompt, steps=4, cache_len=32)
+    assert bool((tight == bucketed).all())
+    with pytest.raises(ValueError, match="cache_len"):
+        generate(params, cfg, prompt, steps=4, cache_len=8)
+
+
 def test_long_500k_runnability_matrix():
     """Shape-level skips follow DESIGN.md §Arch-applicability."""
     sub_quadratic = {"zamba2-7b", "rwkv6-7b", "gemma3-4b"}

@@ -74,6 +74,35 @@ def test_advise_from_fake_dryrun(tmp_path, topo):
     assert tp == 2.5e8 and dp == 1.5e8
 
 
+def test_advise_empty_budget_falls_back_to_baseline(tmp_path, topo):
+    """No policy fits an impossible budget: the advisor answers the
+    always-on baseline (like ``frontier.budget_winner``), never None."""
+    p = tmp_path / "fake-1b__train_4k__pod1.json"
+    p.write_text(json.dumps(FAKE_CELL))
+    out = advise("fake-1b", "train_4k", topo=topo, dryrun_dir=tmp_path,
+                 n_steps=1, max_overhead_pct=-1.0)
+    assert out["recommended"] == "baseline"
+    assert out["table"]["baseline"]["exec_overhead_pct"] == 0.0
+
+
+def test_llm_trace_small_cell_guards_degenerate_split(topo):
+    """n_devices < tp_degree (e.g. an 8-device cell with the default
+    tp_degree=16): the strided DP split used to produce EMPTY node groups
+    and TP allreduce over a non-2**k remainder; the clamp keeps every
+    emitted group a power of two >= 2."""
+    for n_dev in (8, 12):
+        cell = dict(FAKE_CELL, n_devices=n_dev)
+        tr = llm_trace_from_cell(cell, topo, n_steps=1, tp_degree=16)
+        assert len(tr.nodes) == n_dev
+        assert tr.n_messages > 0 and tr.total_bytes > 0
+        for step in tr.steps:
+            if step.msgs is not None and len(step.msgs):
+                assert (step.msgs[:, 0] != step.msgs[:, 1]).all()
+    # a 1-device cell has no collective partners at all: compute-only trace
+    tr = llm_trace_from_cell(dict(FAKE_CELL, n_devices=1), topo, n_steps=1)
+    assert tr.n_messages == 0
+
+
 def test_advise_rejects_failed_cell(tmp_path):
     p = tmp_path / "bad__train_4k__pod1.json"
     p.write_text(json.dumps({"status": "failed", "error": "x"}))
